@@ -1,0 +1,42 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: relative numbers
+only -- the TPU roofline terms for these kernels come from the dry-run).
+
+Reports us/call + achieved element-throughput for the three kernels across
+block-size variants (the BlockSpec tuning axis of §Perf)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3, limb_matmul, lns_matmul
+
+
+def main():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    flops = 2 * 128 * 256 * 256
+
+    for bm in (16, 32):
+        us = time_fn(lambda x, y: lns_matmul(x, y, block_m=bm), a, b, iters=3)
+        emit(f"kernel_lns_matmul_bm{bm}", us, f"gflops={flops/us/1e3:.3f}")
+    for ecc in (1, 3):
+        us = time_fn(lambda x, y: lns_matmul(x, y, num_ecc=ecc, case_split=False),
+                     a, b, iters=3)
+        emit(f"kernel_lns_matmul_ecc{ecc}", us, f"gflops={flops/us/1e3:.3f}")
+    for kar in (True, False):
+        us = time_fn(lambda x, y: limb_matmul(x, y, karatsuba=kar), a, b, iters=3)
+        emit(f"kernel_limb_matmul_{'kom3' if kar else 'kom4'}", us,
+             f"gflops={flops/us/1e3:.3f}")
+
+    img = jnp.asarray(rng.integers(0, 256, (256, 256)), jnp.int32)
+    kern = jnp.asarray(gaussian_kernel_3x3())
+    for meth in ("exact", "refmlm", "mitchell"):
+        us = time_fn(lambda i, k: gaussian_filter(i, k, method=meth), img, kern,
+                     iters=3)
+        emit(f"kernel_gauss_{meth}", us, f"mpix_s={256*256/us:.2f}")
+
+
+if __name__ == "__main__":
+    main()

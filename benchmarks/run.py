@@ -1,0 +1,35 @@
+"""Benchmark aggregator: one module per paper table + kernel bench.
+
+``PYTHONPATH=src python -m benchmarks.run``   prints name,us_per_call,derived
+CSV for every row and exits nonzero if any table's invariant fails.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (kernel_bench, table1_2x2, table6_error, table7_4x4,
+                            table8_dist, table9_scaling, table10_psnr)
+    mods = [table1_2x2, table6_error, table7_4x4, table8_dist,
+            table9_scaling, table10_psnr, kernel_bench]
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in mods:
+        t0 = time.perf_counter()
+        try:
+            mod.main()
+            print(f"# {mod.__name__} ok in {time.perf_counter()-t0:.1f}s")
+        except Exception:                              # noqa: BLE001
+            failures.append(mod.__name__)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+    print("# all benchmark tables passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Table 1: all 16 2-bit x 2-bit combinations -- RMP vs MLMP vs EFMLM.
+
+Reproduces the table exactly: the single erroneous combination is 11x11
+(MLMP=1000b vs RMP=1001b) and the correction term fixes it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.refmlm import efmlm2, mlm2
+
+
+def main() -> list[str]:
+    a = jnp.arange(4, dtype=jnp.int32)[:, None] * jnp.ones((1, 4), jnp.int32)
+    b = jnp.arange(4, dtype=jnp.int32)[None, :] * jnp.ones((4, 1), jnp.int32)
+    rmp = a * b
+    mlmp = mlm2(a, b)
+    ef = efmlm2(a, b)
+    rows = []
+    n_err = 0
+    for i in range(4):
+        for j in range(4):
+            err = int(rmp[i, j]) != int(mlmp[i, j])
+            n_err += err
+            rows.append(f"{i:02b}x{j:02b}: RMP={int(rmp[i,j]):04b} "
+                        f"MLMP={int(mlmp[i,j]):04b} "
+                        f"{'ERR' if err else 'ok '} EFMLM={int(ef[i,j]):04b}")
+    exact = bool((ef == rmp).all())
+    emit("table1_2x2", 0.0,
+         f"mlm_errors={n_err}/16(expect 1: 11x11) efmlm_exact={exact}")
+    assert n_err == 1 and exact
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

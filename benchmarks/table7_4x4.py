@@ -1,0 +1,63 @@
+"""Paper Table 7: 4x4 multiplier comparison.
+
+FPGA LUT counts / combinational delay do not transfer to TPU (DESIGN.md §2);
+the analogue reported here per multiplier is:
+  * AER / MER over ALL 256 4-bit pairs (exhaustive, like the paper's 134
+    unique combinations),
+  * op-count economics (base multiplies + word adds -- Table 9's LUT
+    economics in op form),
+  * measured us/call on a 256x256 tensor of 4-bit operands (vectorized
+    throughput -- the TPU-meaningful "delay").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.karatsuba import op_counts
+from repro.core.mitchell import babic_ecc, mitchell
+from repro.core.odma import odma
+from repro.core.refmlm import refmlm
+
+
+def main():
+    n = 1 << 4
+    a = jnp.arange(n, dtype=jnp.int32)[:, None] * jnp.ones((1, n), jnp.int32)
+    b = jnp.arange(n, dtype=jnp.int32)[None, :] * jnp.ones((n, 1), jnp.int32)
+    true = (a * b).astype(jnp.float32)
+
+    fns = {
+        "Mitchell": lambda x, y: mitchell(x, y, 4),
+        "ODMA": lambda x, y: odma(x, y, 4),
+        "BB+1ECC": lambda x, y: babic_ecc(x, y, 4, num_ecc=1),
+        "BB+2ECC": lambda x, y: babic_ecc(x, y, 4, num_ecc=2),
+        "BB+3ECC": lambda x, y: babic_ecc(x, y, 4, num_ecc=3),
+        "Proposed_noEC": lambda x, y: refmlm(x, y, 4, base="mlm"),
+        "Proposed_withEC": lambda x, y: refmlm(x, y, 4, base="efmlm"),
+    }
+    paper_aer = {"Mitchell": 5.5185, "ODMA": 3.58515, "BB+1ECC": 0.28889,
+                 "BB+2ECC": 0.0074, "BB+3ECC": 0.0, "Proposed_noEC": 1.7629,
+                 "Proposed_withEC": 0.0}
+    big_a = jax.random.randint(jax.random.PRNGKey(0), (256, 256), 0, 16, jnp.int32)
+    big_b = jax.random.randint(jax.random.PRNGKey(1), (256, 256), 0, 16, jnp.int32)
+    oc = op_counts(4, 2, "kom4")
+    out = {}
+    for name, fn in fns.items():
+        p = fn(a, b).astype(jnp.float32)
+        rel = jnp.where(true > 0, (true - p) / true, 0.0)
+        aer = float(jnp.abs(rel).mean()) * 100
+        mer = float(jnp.abs(rel).max()) * 100
+        jfn = jax.jit(fn)
+        us = time_fn(jfn, big_a, big_b)
+        extra = (f" ops={oc['base_mults']}x2b+{oc['adds']}adds"
+                 if name.startswith("Proposed") else "")
+        emit(f"table7_{name}", us,
+             f"AER={aer:.4f}% MER={mer:.3f}% paperAER={paper_aer[name]}%{extra}")
+        out[name] = (aer, mer, us)
+    assert out["Proposed_withEC"][0] == 0.0 and out["Proposed_withEC"][1] == 0.0
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Table 8: distribution of relative error rates of the 4x4
+multiplier -- % of combinations in each error band, for BB / BB+1ECC /
+BB+2ECC / proposed-with-EC-propagated / proposed-without-error (=BB+3ECC
+column in the paper's layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.mitchell import babic_bb, babic_ecc
+from repro.core.refmlm import refmlm
+
+BANDS = [(0.0, 0.0), (0.0, 0.05), (0.05, 0.1), (0.1, 0.5), (0.5, 1.0)]
+
+
+def band_percentages(p, true) -> list[float]:
+    rel = np.where(true > 0, np.abs(true - np.asarray(p, np.float64)) / true, 0.0)
+    nz = rel[true > 0]
+    out = [float((nz == 0.0).mean() * 100)]
+    for lo, hi in BANDS[1:]:
+        out.append(float(((nz > lo) & (nz <= hi)).mean() * 100))
+    return out
+
+
+def main():
+    n = 1 << 4
+    a = jnp.arange(n, dtype=jnp.int32)[:, None] * jnp.ones((1, n), jnp.int32)
+    b = jnp.arange(n, dtype=jnp.int32)[None, :] * jnp.ones((n, 1), jnp.int32)
+    true = np.asarray(a * b, np.float64)
+    rows = {
+        "BB": babic_bb(a, b, 4),
+        "BB+1ECC": babic_ecc(a, b, 4, num_ecc=1),
+        "BB+2ECC": babic_ecc(a, b, 4, num_ecc=2),
+        "WITH_ERROR(prop-noEC)": refmlm(a, b, 4, base="mlm"),
+        "WITHOUT_ERROR(prop-EC)": refmlm(a, b, 4, base="efmlm"),
+    }
+    out = {}
+    for name, p in rows.items():
+        bands = band_percentages(p, true)
+        out[name] = bands
+        emit(f"table8_{name}", 0.0,
+             "pct_by_band[0;(0,.05];(.05,.1];(.1,.5];(.5,1]]="
+             + "/".join(f"{x:.1f}" for x in bands))
+    assert out["WITHOUT_ERROR(prop-EC)"][0] == 100.0      # all-zero band
+    return out
+
+
+if __name__ == "__main__":
+    main()

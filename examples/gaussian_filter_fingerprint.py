@@ -1,0 +1,40 @@
+"""The paper's end-to-end application (§3.3, Table 10): salt&pepper-noised
+fingerprint image, 3x3 Gaussian smoothing through the selectable-multiplier
+Pallas conv kernel, PSNR per multiplier.
+
+    PYTHONPATH=src python examples/gaussian_filter_fingerprint.py [--noise 20]
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.images import add_salt_pepper, fingerprint, psnr
+from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--noise", type=int, default=20, help="salt&pepper %")
+    ap.add_argument("--size", type=int, default=256)
+    args = ap.parse_args()
+
+    base = fingerprint((args.size, args.size), seed=7)
+    noisy = add_salt_pepper(base, args.noise, seed=11)
+    kern = jnp.asarray(gaussian_kernel_3x3(sigma=1.0, scale=256))
+    print(f"Gaussian 3x3 kernel (scale 256, paper Fig. 9):\n{np.asarray(kern)}")
+    print(f"corrupted PSNR @ {args.noise}% noise: {psnr(base, noisy):.2f} dB\n")
+
+    print(f"{'multiplier':16s} {'PSNR (dB)':>10s}")
+    results = {}
+    for mult in ["exact", "refmlm", "refmlm_nc", "mitchell", "mitchell_ecc1",
+                 "mitchell_ecc3", "odma"]:
+        sm = gaussian_filter(jnp.asarray(noisy.astype(np.int32)), kern, method=mult)
+        results[mult] = psnr(base, np.asarray(sm))
+        print(f"{mult:16s} {results[mult]:10.2f}")
+    assert results["refmlm"] == results["exact"], "REFMLM must be error-free"
+    print("\nREFMLM == exact multiplier filter output (paper's zero-error claim).")
+
+
+if __name__ == "__main__":
+    main()

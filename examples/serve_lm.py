@@ -1,0 +1,12 @@
+"""Serving example: batched prefill + greedy decode with sharded caches,
+for any decoder arch (default zamba2 -- exercises the hybrid SSM cache).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-1.2b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "zamba2-1.2b", *sys.argv[1:]]
+    main()

@@ -1,0 +1,18 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family model for a few
+hundred steps on CPU through the production code path (sharded state,
+checkpointing, fault-tolerant loop, deterministic data).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This is a thin veneer over repro.launch.train -- the same launcher the
+production mesh would use.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen2-0.5b", "--d-model", "512",
+                "--steps", "300", "--batch", "8", "--seq", "128",
+                *sys.argv[1:]]
+    main()

@@ -1,0 +1,42 @@
+"""§Perf hillclimb driver: re-derive roofline terms for one cell with a set
+of overrides and print before/after-style rows.
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch xlstm-1.3b \
+        --shape train_4k --overrides '{"prefer_dp": true}' --tag dp_fold
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--overrides", default="{}")
+    ap.add_argument("--tag", default="exp")
+    ap.add_argument("--out", default="benchmarks/artifacts/perf")
+    args = ap.parse_args()
+
+    from repro.roofline.runner import roofline_cell
+    overrides = json.loads(args.overrides)
+    rec = roofline_cell(args.arch, args.shape, overrides=overrides or None)
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"{args.arch} {args.shape} [{args.tag}] "
+          f"compute={rec['compute_s']:.4f}s memory={rec['memory_s']:.4f}s "
+          f"coll={rec['collective_s']:.4f}s bottleneck={rec['bottleneck']} "
+          f"roofline={rec['roofline_fraction']:.2%} useful={rec['useful_ratio']:.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Splice generated tables into EXPERIMENTS.md at the marker comments."""
+import re
+import subprocess
+import sys
+
+ROOT = __file__.rsplit("/", 2)[0]
+
+
+def gen(which):
+    out = subprocess.run([sys.executable, f"{ROOT}/scripts/make_experiments_tables.py",
+                          which], capture_output=True, text=True,
+                         env={"PYTHONPATH": f"{ROOT}/src", "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0, out.stderr
+    # drop the heading line the generator prints
+    lines = out.stdout.splitlines()
+    return "\n".join(l for l in lines if not l.startswith("## "))
+
+
+def splice(text, marker, content):
+    pat = re.compile(rf"(<!-- {marker} -->).*?(?=\n## |\n### |\Z)", re.S)
+    repl = f"<!-- {marker} -->\n\n{content}\n"
+    assert pat.search(text), marker
+    return pat.sub(lambda m: repl, text, count=1)
+
+
+path = f"{ROOT}/EXPERIMENTS.md"
+text = open(path).read()
+text = splice(text, "DRYRUN_TABLE", gen("dryrun"))
+text = splice(text, "ROOFLINE_TABLE", gen("roofline"))
+open(path, "w").write(text)
+print("spliced")

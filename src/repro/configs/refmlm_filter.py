@@ -1,0 +1,23 @@
+"""The paper's own application config: 3x3 Gaussian smoothing of fingerprint
+images with the REFMLM multiplier family (paper §3.3, Tables 7-10).
+
+Not an LM architecture -- consumed by examples/gaussian_filter_fingerprint.py
+and benchmarks/table10_psnr.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterConfig:
+    image_hw: tuple[int, int] = (256, 256)
+    sigma: float = 1.0
+    kernel_scale: int = 256          # paper Fig. 9
+    nbits: int = 8                   # pixel width; the paper's 8x8 REFMLM
+    multiplier: str = "refmlm"       # exact|refmlm|refmlm_nc|mitchell|mitchell_ecc{k}|odma
+    noise_levels: tuple[int, ...] = (10, 20, 30, 40)   # % salt&pepper, Table 10
+    block_rows: int = 32             # Pallas conv row-band tile
+
+
+CONFIG = FilterConfig()

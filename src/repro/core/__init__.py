@@ -1,0 +1,17 @@
+"""repro.core -- the paper's contribution: the REFMLM multiplier family.
+
+Public API:
+  mitchell / mitchell_corrected / babic_bb / babic_ecc   (paper §2.1-2.2, [18])
+  odma                                                   (baseline [19])
+  refmlm / efmlm2 / mlm2 / op_counts                     (paper §3, the artifact)
+  matmul(a, b, method=...)                               (framework integration)
+"""
+from repro.core.approx_matmul import METHODS, matmul
+from repro.core.mitchell import babic_bb, babic_ecc, mitchell, mitchell_corrected
+from repro.core.odma import odma
+from repro.core.refmlm import efmlm2, mlm2, op_counts, refmlm
+
+__all__ = [
+    "METHODS", "matmul", "mitchell", "mitchell_corrected", "babic_bb",
+    "babic_ecc", "odma", "refmlm", "efmlm2", "mlm2", "op_counts",
+]

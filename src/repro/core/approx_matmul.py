@@ -1,0 +1,143 @@
+"""Unified matmul API over the multiplier family (DESIGN.md §4).
+
+    matmul(a, b, method=...)   a: (..., M, K) float   b: (K, N) float
+
+Methods
+  exact            -- jnp.matmul (bf16/f32 MXU baseline).
+  int8             -- symmetric int8 quantized matmul, 1 MXU pass.
+  schoolbook_int16 -- exact ~int16 matmul from 4 int8-limb passes.
+  karatsuba_int16  -- ~int13 matmul from 3 int8-limb passes (the paper's
+                      KOM trade on the MXU; see core/quant.py).
+  mitchell / mitchell_ecc{k} / odma -- LNS approximate matmuls: every scalar
+                      multiply is the corresponding paper multiplier on
+                      `nbits`-quantized magnitudes (sign-tracked).
+  refmlm           -- bit-exact integer matmul via the paper's recursive
+                      multiplier (oracle for the quantized path: identical
+                      result to 'exact quantized' by the paper's theorem).
+
+The LNS methods are reference-semantics implementations (element products
+then reduce); the Pallas kernels in repro/kernels tile the same math for
+TPU VMEM. Large-model layers call this API with method from the config's
+`matmul_method` so the technique is a first-class framework feature.
+"""
+from __future__ import annotations
+
+import re
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.mitchell import babic_ecc as _babic_ecc
+from repro.core.mitchell import mitchell as _mitchell
+from repro.core.odma import odma as _odma
+from repro.core.quant import quantize_limbs, quantize_magnitude
+from repro.core.refmlm import refmlm as _refmlm
+
+METHODS = (
+    "exact",
+    "int8",
+    "schoolbook_int16",
+    "karatsuba_int16",
+    "mitchell",
+    "mitchell_ecc1",
+    "mitchell_ecc2",
+    "mitchell_ecc3",
+    "odma",
+    "refmlm",
+    "refmlm_kom3",
+)
+
+
+def _scalar_multiplier(method: str, nbits: int) -> Callable[[Array, Array], Array]:
+    if method == "mitchell":
+        return partial(_mitchell, nbits=nbits)
+    if m := re.fullmatch(r"mitchell_ecc(\d+)", method):
+        return partial(_babic_ecc, nbits=nbits, num_ecc=int(m.group(1)))
+    if method == "odma":
+        return partial(_odma, nbits=nbits)
+    if method == "refmlm":
+        return partial(_refmlm, nbits=nbits, variant="kom4", base="efmlm")
+    if method == "refmlm_kom3":
+        return partial(_refmlm, nbits=nbits, variant="kom3", base="efmlm")
+    raise ValueError(f"unknown LNS method {method!r}")
+
+
+def _lns_matmul(a: Array, b: Array, method: str, nbits: int, row_chunk: int) -> Array:
+    """Sign-magnitude LNS matmul: out[m,n] = sum_k mult(|a|,|b|) * sign."""
+    mult = _scalar_multiplier(method, nbits)
+    qa = quantize_magnitude(a, nbits)
+    qb = quantize_magnitude(b, nbits)
+    sa = qa.magnitude * qa.sign            # signed magnitudes, int32
+    sb = qb.magnitude * qb.sign
+
+    def row_block(a_blk: Array) -> Array:  # a_blk: (r, K)
+        mag = mult(jnp.abs(a_blk)[:, :, None], jnp.abs(sb)[None, :, :])
+        sgn = jnp.sign(a_blk)[:, :, None] * jnp.sign(sb)[None, :, :]
+        # Products are < 2^(2*nbits); accumulate in f32 (exact for the
+        # default nbits=8 up to K=256, ample for the research path).
+        return jnp.sum(mag.astype(jnp.float32) * sgn.astype(jnp.float32), axis=1)
+
+    a2 = sa.reshape(-1, sa.shape[-1])
+    m_rows = a2.shape[0]
+    pad = (-m_rows) % row_chunk
+    a2 = jnp.pad(a2, ((0, pad), (0, 0)))
+    blocks = a2.reshape(-1, row_chunk, a2.shape[-1])
+    out = jax.lax.map(row_block, blocks).reshape(-1, sb.shape[-1])[:m_rows]
+    acc = out * (qa.scale * qb.scale)
+    return acc.reshape(*a.shape[:-1], b.shape[-1])
+
+
+def _limb_matmul(a: Array, b: Array, karatsuba: bool) -> Array:
+    """Exact wide-int matmul from int8-limb MXU passes (3 or 4)."""
+    da, sa = quantize_limbs(a, karatsuba=karatsuba)
+    db, sb = quantize_limbs(b, karatsuba=karatsuba)
+    w = da.limb_bits
+    dot = partial(jnp.matmul, preferred_element_type=jnp.int32)
+    hh = dot(da.hi, db.hi)
+    ll = dot(da.lo, db.lo)
+    if karatsuba:
+        # (hi+lo) fits int8 by construction (w=7): 3 passes.
+        mid = dot(da.hi + da.lo, db.hi + db.lo) - hh - ll
+    else:
+        mid = dot(da.hi, db.lo) + dot(da.lo, db.hi)   # 4 passes (w=8)
+    # Reconstruct in f32: the int32 partial sums are exact per-pass; shifting
+    # hh by 2w bits can overflow int32 for large K, so scale in float instead
+    # (matches the TPU datapath: int32 accumulators, float rescale).
+    acc = (hh.astype(jnp.float32) * float(1 << (2 * w))
+           + mid.astype(jnp.float32) * float(1 << w)
+           + ll.astype(jnp.float32))
+    return acc * (sa * sb)
+
+
+def _int8_matmul(a: Array, b: Array) -> Array:
+    qa = quantize_magnitude(a, 7)          # int8 symmetric: magnitudes < 128
+    qb = quantize_magnitude(b, 7)
+    acc = jnp.matmul(qa.magnitude * qa.sign, qb.magnitude * qb.sign,
+                     preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (qa.scale * qb.scale)
+
+
+def matmul(
+    a: Array,
+    b: Array,
+    method: str = "exact",
+    *,
+    nbits: int = 8,
+    row_chunk: int = 64,
+    precision=None,
+) -> Array:
+    """Unified (..., M, K) x (K, N) matmul over the multiplier family."""
+    if method == "exact":
+        return jnp.matmul(a, b, precision=precision)
+    if method == "int8":
+        return _int8_matmul(a, b)
+    if method == "schoolbook_int16":
+        return _limb_matmul(a, b, karatsuba=False)
+    if method == "karatsuba_int16":
+        return _limb_matmul(a, b, karatsuba=True)
+    if method in METHODS:
+        return _lns_matmul(a, b, method, nbits, row_chunk)
+    raise ValueError(f"unknown method {method!r}; valid: {METHODS}")

@@ -1,0 +1,71 @@
+"""Vectorized integer bit operations used by the logarithmic multipliers.
+
+All functions operate element-wise on integer JAX arrays (any shape). The
+"hardware" lane width is int32 unless stated otherwise; operands are assumed
+to be non-negative values representable in `nbits` <= 31 bits so that shifts
+never overflow the lane.
+
+These are the TPU-native stand-ins for the paper's FPGA primitives:
+  - leading-one detector (LOD)  -> branch-free CLZ via conditional shifts
+  - barrel shifter              -> jnp left/right shifts
+  - zero detector               -> jnp.where on (x == 0)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+
+def leading_one_position(x: Array) -> Array:
+    """Position of the most-significant set bit (floor(log2(x))) per element.
+
+    Branch-free binary-search CLZ, the vectorized equivalent of the paper's
+    LOD circuit. Returns 0 for x == 0 (callers must zero-detect separately,
+    exactly as the paper's architecture does with its zero-detector block).
+    """
+    x = x.astype(jnp.int32)
+    k = jnp.zeros_like(x)
+    for shift in (16, 8, 4, 2, 1):
+        gt = x >= (1 << shift)
+        k = k + jnp.where(gt, shift, 0)
+        x = jnp.where(gt, x >> shift, x)
+    return k
+
+
+def mantissa(x: Array, k: Array) -> Array:
+    """Integer mantissa  x - 2^k  (the bits below the leading one).
+
+    In the paper's notation x = 2^k (1 + f) with f = mantissa / 2^k.
+    """
+    x = x.astype(jnp.int32)
+    return x - jnp.where(x > 0, jnp.int32(1) << k, 0)
+
+
+def decode_power(k: Array) -> Array:
+    """Decoder: characteristic number k -> 2^k (paper's d = decoded k)."""
+    return jnp.int32(1) << k
+
+
+def bit_width_mask(nbits: int) -> int:
+    return (1 << nbits) - 1
+
+
+def split_halves(x: Array, nbits: int) -> tuple[Array, Array]:
+    """Decompose an nbits operand into (high, low) nbits/2 halves.
+
+    Paper Table 2 steps 1-4:  a_L = a[0 .. n/2-1],  a_H = a[n/2 .. n-1].
+    """
+    assert nbits % 2 == 0, f"radix-2 decomposition needs even width, got {nbits}"
+    half = nbits // 2
+    lo = x & bit_width_mask(half)
+    hi = (x >> half) & bit_width_mask(half)
+    return hi, lo
+
+
+def popcount(x: Array, nbits: int = 32) -> Array:
+    """Number of set bits per element (used by the ODMA error analysis)."""
+    x = x.astype(jnp.uint32)
+    c = jnp.zeros_like(x)
+    for i in range(nbits):
+        c = c + ((x >> i) & 1)
+    return c.astype(jnp.int32)

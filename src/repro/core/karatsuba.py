@@ -1,0 +1,90 @@
+"""Generic-width Karatsuba-Ofman recursion (paper §2.3) over pluggable base
+multipliers.
+
+This is the KOM *scaffold* factored out of the REFMLM artifact so it can be
+studied independently:
+
+  * `kom(a, b, nbits, base_nbits, base_fn, variant)` recurses radix-2 from
+    `nbits` down to `base_nbits`, then applies `base_fn` -- any elementwise
+    exact-or-approximate multiplier on `base_nbits`-wide operands.
+  * `variant='kom4'` is the paper's own 4-product split (Table 2 steps 5-8);
+    `variant='kom3'` is eq. 19's true 3-product Karatsuba with a sign-tracked
+    cross term.
+  * `exact_base(w)` gives the hardware-exact base (the MXU analogue: a narrow
+    exact unit composed into a wide exact multiply -- the REFMLM program).
+
+Widths up to 16 keep products in int32 lanes (matching the paper's 16x16
+ceiling); `op_counts` generalizes Table 9's LUT-economics to op-count
+economics for any (nbits, base_nbits, variant).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.bitops import split_halves
+from repro.core.mitchell import _check_width, _prod_dtype
+
+BaseFn = Callable[[Array, Array], Array]
+
+
+def exact_base(base_nbits: int) -> BaseFn:
+    """Hardware-exact base multiplier (int32 lane product)."""
+    del base_nbits
+    return lambda a, b: a.astype(jnp.int32) * b.astype(jnp.int32)
+
+
+def kom(
+    a: Array,
+    b: Array,
+    nbits: int,
+    *,
+    base_nbits: int = 2,
+    base_fn: BaseFn | None = None,
+    variant: str = "kom4",
+) -> Array:
+    """KOM product of non-negative `nbits`-wide operands.
+
+    Exact iff `base_fn` is exact on `base_nbits`-wide operands (the paper's
+    theorem: KOM introduces no error of its own -- eq. 17/19 are identities).
+    """
+    _check_width(nbits)
+    if nbits % base_nbits != 0 or (nbits // base_nbits) & (nbits // base_nbits - 1):
+        # require nbits = base * 2^L
+        raise ValueError(f"nbits={nbits} must be base_nbits*2^L (base={base_nbits})")
+    if base_fn is None:
+        base_fn = exact_base(base_nbits)
+
+    def recurse(x: Array, y: Array, w: int) -> Array:
+        if w == base_nbits:
+            return base_fn(x, y)
+        half = w // 2
+        dt = _prod_dtype(w)
+        xh, xl = split_halves(x.astype(jnp.int32), w)
+        yh, yl = split_halves(y.astype(jnp.int32), w)
+        low = recurse(xl, yl, half).astype(jnp.int32)
+        high = recurse(xh, yh, half).astype(jnp.int32)
+        if variant == "kom4":
+            mid = (recurse(xh, yl, half).astype(jnp.int32)
+                   + recurse(xl, yh, half).astype(jnp.int32))
+        elif variant == "kom3":
+            dl, dr = xl - xh, yh - yl
+            sign = jnp.sign(dl) * jnp.sign(dr)
+            mid = low + high + sign * recurse(jnp.abs(dl), jnp.abs(dr), half).astype(jnp.int32)
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+        return low.astype(dt) + (mid.astype(dt) << half) + (high.astype(dt) << w)
+
+    return recurse(a, b, nbits)
+
+
+def op_counts(nbits: int, base_nbits: int = 2, variant: str = "kom4") -> dict[str, int]:
+    """Base-multiplies and word-adds per product (Table 9 economics, op form)."""
+    if nbits == base_nbits:
+        return {"base_mults": 1, "adds": 0}
+    sub = op_counts(nbits // 2, base_nbits, variant)
+    if variant == "kom4":
+        return {"base_mults": 4 * sub["base_mults"], "adds": 4 * sub["adds"] + 3}
+    return {"base_mults": 3 * sub["base_mults"], "adds": 3 * sub["adds"] + 6}

@@ -1,0 +1,57 @@
+"""Log-number-system (LNS) tensor codecs.
+
+An integer magnitude v > 0 is represented as the fixed-point log
+  L(v) = (k << F) | round(mantissa-fraction * 2^F truncated)
+with k the characteristic (leading-one position) and F fraction bits.
+Mitchell's approximation corresponds to the *truncated* fraction
+(f = (v - 2^k) / 2^k represented exactly when F >= nbits-1).
+
+These codecs are used by the LNS serving path to pre-encode weights once so
+per-step multiplies are pure adds (the paper's motivation: log/antilog by
+shifts, multiply by add).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.bitops import leading_one_position
+
+
+class LNSCode(NamedTuple):
+    code: Array            # int32 fixed-point log2, (k << frac_bits) | frac
+    is_zero: Array         # bool
+    frac_bits: int
+
+
+def encode(v: Array, nbits: int, frac_bits: int | None = None) -> LNSCode:
+    """Exact Mitchell log encode of unsigned integers (frac_bits >= nbits-1)."""
+    if frac_bits is None:
+        frac_bits = nbits - 1
+    v = v.astype(jnp.int32)
+    k = leading_one_position(v)
+    mant = v - jnp.where(v > 0, jnp.int32(1) << k, 0)
+    # fraction = mant / 2^k, stored in frac_bits: mant << (frac_bits - k)
+    frac = jnp.where(
+        frac_bits >= k, mant << (frac_bits - k), mant >> (k - frac_bits)
+    )
+    return LNSCode((k << frac_bits) | frac, v == 0, frac_bits)
+
+
+def decode(c: LNSCode) -> Array:
+    """Mitchell antilog: 2^k (1 + f), with the >=1 carry case of eq. 8."""
+    fb = c.frac_bits
+    k = c.code >> fb
+    frac = c.code & ((1 << fb) - 1)
+    # antilog(k.f) = (1 << k) + (frac scaled to k bits)
+    v = (jnp.int32(1) << k) + jnp.where(fb >= k, frac >> (fb - k), frac << (k - fb))
+    return jnp.where(c.is_zero, 0, v)
+
+
+def lns_multiply(a: LNSCode, b: LNSCode) -> LNSCode:
+    """Multiplication = addition of log codes (the sum's carry into the
+    characteristic field implements eq. 8's f1+f2 >= 1 case for free)."""
+    assert a.frac_bits == b.frac_bits
+    return LNSCode(a.code + b.code, a.is_zero | b.is_zero, a.frac_bits)

@@ -1,0 +1,43 @@
+"""Operand-Decomposition Mitchell multiplier (ODMA) -- paper baseline [19],
+Mahalingam & Ranganathan, IEEE ToC 2006.
+
+Identity (verified in tests/test_core_multipliers.py):
+
+    a * b = (a AND b) * (a OR b)  +  (a AND NOT b) * (NOT a AND b)
+
+Proof sketch: with p = a&b, q = a&~b, r = ~a&b we have a = p+q, b = p+r
+(disjoint bit sets add without carries), so a*b = p^2 + pr + qp + qr
+= p*(p+q+r) + q*r = (a&b)*(a|b) + (a&~b)*(~a&b).
+
+Each decomposed sub-product is evaluated with Mitchell's algorithm; the
+decomposed operands have disjoint/fewer set bits, which lowers the Mitchell
+mantissa error (AER 3.53% vs 3.82% for 16x16, paper Table 6).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.mitchell import _check_width, _prod_dtype, mitchell
+
+
+def decompose(a: Array, b: Array, nbits: int) -> tuple[Array, Array, Array, Array]:
+    mask = jnp.int32((1 << nbits) - 1)
+    a = a.astype(jnp.int32) & mask
+    b = b.astype(jnp.int32) & mask
+    return a & b, a | b, a & (~b & mask), (~a & mask) & b
+
+
+def odma(a: Array, b: Array, nbits: int = 16) -> Array:
+    """ODMA approximate product: two Mitchell multiplies + one add."""
+    _check_width(nbits)
+    p1a, p1b, p2a, p2b = decompose(a, b, nbits)
+    return mitchell(p1a, p1b, nbits) + mitchell(p2a, p2b, nbits)
+
+
+def odma_exact_identity(a: Array, b: Array, nbits: int = 16) -> Array:
+    """The decomposition identity evaluated with exact products (oracle)."""
+    _check_width(nbits)
+    dt = _prod_dtype(nbits)
+    p1a, p1b, p2a, p2b = decompose(a, b, nbits)
+    return p1a.astype(dt) * p1b.astype(dt) + p2a.astype(dt) * p2b.astype(dt)

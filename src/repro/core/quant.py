@@ -1,0 +1,91 @@
+"""Quantization helpers bridging real-valued tensors and the integer
+multiplier family.
+
+Two regimes:
+  * unsigned magnitude + sign (for the LNS / Mitchell family, which is
+    defined on non-negative operands, like the paper's datapath), and
+  * balanced signed limbs (for the Karatsuba int8-limb MXU decomposition).
+
+Limb encoding for the MXU path (DESIGN.md §2): the MXU's exact unit is
+int8 x int8 -> int32. A wide signed integer A is decomposed into limbs of
+width w:  A = A_hi * 2^w + A_lo  with  A_lo in [-2^(w-1), 2^(w-1)-1]
+(balanced remainder) and A_hi the carry-adjusted quotient.
+
+  * schoolbook (4 passes): w = 8, representable range ~ +-2^15
+    (|A_hi| <= 127 requires |A| <= 32512).
+  * karatsuba (3 passes): the middle pass multiplies (A_hi + A_lo), which
+    must itself fit int8, so both limbs are confined to [-64, 63] => w = 7,
+    range ~ +-2^13. Karatsuba on this hardware trades ~2 bits of operand
+    range for 25% fewer MXU passes -- the paper's adder-for-multiplier trade
+    re-priced for a systolic array.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+
+class QuantizedMagnitude(NamedTuple):
+    magnitude: Array       # int32, in [0, 2^nbits)
+    sign: Array            # int32, in {-1, 0, +1}
+    scale: Array           # float32 scalar or per-axis vector
+
+
+def quantize_magnitude(x: Array, nbits: int, axis: int | None = None) -> QuantizedMagnitude:
+    """Symmetric magnitude quantization to unsigned `nbits` integers."""
+    qmax = float(2**nbits - 1)
+    absx = jnp.abs(x).astype(jnp.float32)
+    amax = absx.max() if axis is None else absx.max(axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / qmax
+    mag = jnp.clip(jnp.round(absx / scale), 0, qmax).astype(jnp.int32)
+    return QuantizedMagnitude(mag, jnp.sign(x).astype(jnp.int32), scale)
+
+
+def dequantize_product(acc: Array, qa: QuantizedMagnitude, qb: QuantizedMagnitude) -> Array:
+    return acc.astype(jnp.float32) * (qa.scale * qb.scale)
+
+
+def fake_quant(x: Array, nbits: int, axis: int | None = None) -> Array:
+    """Straight-through fake quantization (QAT research path)."""
+    q = quantize_magnitude(x, nbits, axis)
+    deq = (q.magnitude.astype(jnp.float32) * q.sign.astype(jnp.float32)) * q.scale
+    # Straight-through estimator: forward quantized, gradient identity.
+    return x + jnp.asarray(deq - x).astype(x.dtype)  # lax.stop_gradient applied by caller if needed
+
+
+class LimbDecomposition(NamedTuple):
+    hi: Array              # int8-representable limb (kept int32 on CPU)
+    lo: Array
+    limb_bits: int
+
+
+def _balanced_limbs(q: Array, w: int) -> tuple[Array, Array]:
+    """q = hi * 2^w + lo with lo in [-2^(w-1), 2^(w-1)-1]."""
+    half = 1 << (w - 1)
+    lo = ((q + half) & ((1 << w) - 1)) - half
+    hi = (q - lo) >> w
+    return hi, lo
+
+
+def quantize_limbs(x: Array, *, karatsuba: bool, axis: int | None = None) -> tuple[LimbDecomposition, Array]:
+    """Quantize a float tensor into balanced int8 limbs + scale.
+
+    karatsuba=True  -> w=7 limbs confined to [-64, 63] (range +-8256).
+    karatsuba=False -> w=8 limbs, hi in [-127,127], lo in [-128,127] (+-32512).
+    """
+    if karatsuba:
+        w, qlim = 7, 63 * 128 + 63        # 8127: hi,lo both land in [-64,63]
+    else:
+        w, qlim = 8, 127 * 256 + 127      # 32639: hi in [-128,127] by construction
+    absx = jnp.abs(x).astype(jnp.float32)
+    amax = absx.max() if axis is None else absx.max(axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / qlim
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qlim, qlim).astype(jnp.int32)
+    hi, lo = _balanced_limbs(q, w)
+    return LimbDecomposition(hi, lo, w), scale
+
+
+def limbs_to_int(d: LimbDecomposition) -> Array:
+    return (d.hi << d.limb_bits) + d.lo

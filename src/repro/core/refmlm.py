@@ -1,0 +1,144 @@
+"""REFMLM -- the paper's contribution: Recursive Error-Free Mitchell Log
+Multiplier (paper §3, Table 2 algorithm).
+
+  * 2x2 EFMLM base (§3.1): Mitchell on 2-bit operands; the only erroneous
+    combination is 11b x 11b (3*3 -> 8 instead of 9), fixed by the single
+    correction term  prod(z_i) = a1&a0&b1&b0  (eq. 23). The base is EXACT.
+  * KOM recursion (§3.2): radix-2 decomposition of the n-bit multiply into
+    half-width multiplies until the 2x2 base.
+
+Two recursion variants are provided (see DESIGN.md §1 faithfulness notes):
+
+  kom4 -- the paper's own algorithm (Table 2 steps 5-8): 4 sub-products per
+          level; 16x16 -> 64 base multiplies, matching the paper's count.
+  kom3 -- eq. 19's true Karatsuba form: 3 sub-products per level via
+          (a_L - a_H)(b_H - b_L) with sign tracking; 16x16 -> 27 base
+          multiplies. The beyond-paper default on TPU.
+
+Base variants:
+
+  efmlm -- error-corrected 2x2 base  => n x n product is EXACT (AER=MER=0,
+           paper Tables 6/7 'Proposed with Error Correction').
+  mlm   -- uncorrected 2x2 Mitchell  => error propagates through the
+           recursion ('Proposed Without Error Correction', AER 1.76% @ 4x4).
+
+Widths: nbits in {2, 4, 8, 16} (paper max is 16x16). Products are exact in
+uint32 lanes at 16 bits, so no x64 mode is required.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.bitops import split_halves
+from repro.core.mitchell import _check_width, _prod_dtype
+
+SUPPORTED_WIDTHS = (2, 4, 8, 16)
+
+
+def mlm2(a: Array, b: Array) -> Array:
+    """Uncorrected 2x2 Mitchell product (paper Table 1 MLMP column).
+
+    Closed form on 2-bit operands: the only approximation error is 3*3 -> 8.
+    Implemented via the integer Mitchell formula specialized to k in {0, 1}.
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    k1 = (a >> 1) & 1          # leading-one position for 2-bit operands
+    k2 = (b >> 1) & 1
+    x1 = a - jnp.where(a > 0, jnp.int32(1) << k1, 0)
+    x2 = b - jnp.where(b > 0, jnp.int32(1) << k2, 0)
+    m = (x1 << k2) + (x2 << k1)
+    lead = jnp.int32(1) << (k1 + k2)
+    p = jnp.where(m < lead, lead + m, 2 * m)
+    return jnp.where((a == 0) | (b == 0), 0, p)
+
+
+def efmlm2(a: Array, b: Array) -> Array:
+    """Error-Free 2x2 Mitchell multiplier (paper §3.1, eq. 23).
+
+    mlm2 plus the single-AND correction term  a1*a0*b1*b0  (adds 1 exactly for
+    the 11b x 11b combination). Exact for all 16 operand combinations.
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    correction = (a >> 1) & a & (b >> 1) & b & 1
+    return mlm2(a, b) + correction
+
+
+def _recurse(a: Array, b: Array, nbits: int, base_fn, variant: str) -> Array:
+    """Exact-structure KOM recursion; returns the 2*nbits-bit product."""
+    if nbits == 2:
+        return base_fn(a, b)
+    half = nbits // 2
+    dt = _prod_dtype(nbits)
+    a_h, a_l = split_halves(a.astype(jnp.int32), nbits)
+    b_h, b_l = split_halves(b.astype(jnp.int32), nbits)
+    low = _recurse(a_l, b_l, half, base_fn, variant).astype(jnp.int32)
+    high = _recurse(a_h, b_h, half, base_fn, variant).astype(jnp.int32)
+    if variant == "kom4":
+        # Paper Table 2 steps 5-8: mid1 = a_H*b_L, mid2 = a_L*b_H.
+        mid1 = _recurse(a_h, b_l, half, base_fn, variant).astype(jnp.int32)
+        mid2 = _recurse(a_l, b_h, half, base_fn, variant).astype(jnp.int32)
+        mid = mid1 + mid2
+    elif variant == "kom3":
+        # Eq. 18/19: a_L*b_H + a_H*b_L = low + high + (a_L - a_H)(b_H - b_L),
+        # with the cross term sign-tracked so the base stays unsigned.
+        dl = a_l - a_h
+        dr = b_h - b_l
+        sign = jnp.sign(dl) * jnp.sign(dr)
+        t = _recurse(jnp.abs(dl), jnp.abs(dr), half, base_fn, variant)
+        mid = low + high + sign * t.astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return (
+        low.astype(dt)
+        + (mid.astype(dt) << half)
+        + (high.astype(dt) << nbits)
+    )
+
+
+def refmlm(
+    a: Array,
+    b: Array,
+    nbits: int = 16,
+    *,
+    variant: str = "kom4",
+    base: str = "efmlm",
+) -> Array:
+    """The paper's recursive multiplier, vectorized over tensors.
+
+    Args:
+      a, b: non-negative integer arrays with values < 2**nbits.
+      nbits: operand width, one of 2/4/8/16.
+      variant: 'kom4' (paper-faithful 4-product split) or 'kom3' (true
+        Karatsuba 3-product split).
+      base: 'efmlm' (error-free base => exact product) or 'mlm' (uncorrected
+        base => error propagates, the paper's ablation).
+    Returns:
+      The 2*nbits-bit product (exact iff base='efmlm').
+    """
+    _check_width(nbits)
+    if nbits not in SUPPORTED_WIDTHS:
+        raise ValueError(f"nbits must be one of {SUPPORTED_WIDTHS}, got {nbits}")
+    base_fn = {"efmlm": efmlm2, "mlm": mlm2}[base]
+    return _recurse(a, b, nbits, base_fn, variant)
+
+
+refmlm16 = partial(refmlm, nbits=16)
+
+
+def op_counts(nbits: int, variant: str = "kom4") -> dict[str, int]:
+    """Analytic operation counts -- the TPU analogue of the paper's LUT table
+    (Table 9): base 2x2 multiplies and word adds per n x n product."""
+    if nbits == 2:
+        return {"base_mults": 1, "adds": 0}
+    half = nbits // 2
+    sub = op_counts(half, variant)
+    if variant == "kom4":
+        # 4 sub-products, 3 combining adds.
+        return {"base_mults": 4 * sub["base_mults"], "adds": 4 * sub["adds"] + 3}
+    # kom3: 3 sub-products; 2 operand subs + 2 adds for mid + 2 combining adds.
+    return {"base_mults": 3 * sub["base_mults"], "adds": 3 * sub["adds"] + 6}

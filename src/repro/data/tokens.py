@@ -1,0 +1,49 @@
+"""Deterministic sharded synthetic LM data.
+
+Every batch is a pure function of (seed, step, shard_index) -- no filesystem,
+no state -- so restarts, elastic re-meshes and straggler-replayed steps are
+bit-reproducible by construction (runtime/fault.py relies on this: a restart
+re-reads exactly the batches the failed run saw).
+
+The generator produces Zipf-ish token draws (more realistic softmax stats
+than uniform) and next-token labels. Modality frontends are stubs per the
+assignment: frames are PRNG embeddings, image patches are PRNG embeddings.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed: int, step: int, shard: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, step, shard]))
+
+
+def lm_batch(cfg, *, batch: int, seq: int, seed: int = 0, step: int = 0,
+             shard: int = 0, num_shards: int = 1) -> dict:
+    """One shard of the global batch. batch = per-shard rows."""
+    rng = _rng(seed, step, shard)
+    # Zipf over the vocab, clipped: heavier head like natural text.
+    v = cfg.vocab_size
+    toks = (rng.zipf(1.3, size=(batch, seq + 1)) - 1).clip(0, v - 1).astype(np.int32)
+    out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.input_kind == "frames":
+        out = {
+            "frames": rng.standard_normal((batch, seq, cfg.frame_dim),
+                                          dtype=np.float32),
+            "labels": (rng.integers(0, v, (batch, seq))).astype(np.int32),
+        }
+    elif cfg.input_kind == "tokens+image":
+        out["image_embeds"] = rng.standard_normal(
+            (batch, cfg.image_tokens, cfg.d_model), dtype=np.float32) * 0.02
+    return out
+
+
+def global_batch_iter(cfg, *, global_batch: int, seq: int, seed: int = 0,
+                      start_step: int = 0):
+    """Single-host iterator over full global batches (CPU-scale drivers)."""
+    step = start_step
+    while True:
+        yield step, lm_batch(cfg, batch=global_batch, seq=seq, seed=seed,
+                             step=step)
+        step += 1

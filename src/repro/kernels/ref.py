@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact where stated).
+
+Each oracle mirrors its kernel's integer dataflow exactly -- same
+quantization, same accumulator dtype -- so tests assert exact equality for
+integer outputs and allclose for float rescales.
+"""
+from __future__ import annotations
+
+import functools
+import re
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.kernels.gaussian_conv import _tap_multiplier
+
+
+def mitchell_matmul_ref(
+    a: Array, b: Array, *, num_ecc: int = 0, case_split: bool = True
+) -> Array:
+    """Signed-magnitude LNS matmul oracle, int32 accumulation.
+
+    a (M, K), b (K, N): signed int32 with |.| < 2^nbits. Bit-exact vs kernel.
+    """
+    am = jnp.abs(a)[:, :, None].astype(jnp.int32)
+    bm = jnp.abs(b)[None, :, :].astype(jnp.int32)
+    sgn = (jnp.sign(a)[:, :, None] * jnp.sign(b)[None, :, :]).astype(jnp.int32)
+    ra = jnp.broadcast_to(am, (a.shape[0], a.shape[1], b.shape[1]))
+    rb = jnp.broadcast_to(bm, ra.shape)
+    total = jnp.zeros(ra.shape, jnp.int32)
+    for stage in range(num_ecc + 1):
+        k1 = _lod(ra)
+        x1 = ra - jnp.where(ra > 0, jnp.int32(1) << k1, 0)
+        k2 = _lod(rb)
+        x2 = rb - jnp.where(rb > 0, jnp.int32(1) << k2, 0)
+        m = (x1 << k2) + (x2 << k1)
+        lead = jnp.int32(1) << (k1 + k2)
+        if case_split and stage == num_ecc:
+            p = jnp.where(m < lead, lead + m, 2 * m)
+        else:
+            p = lead + m
+        p = jnp.where((ra == 0) | (rb == 0), 0, p)
+        total = total + p
+        ra, rb = x1, x2
+    return jnp.sum(total * sgn, axis=1)
+
+
+def _lod(x: Array) -> Array:
+    k = jnp.zeros_like(x)
+    for shift in (16, 8, 4, 2, 1):
+        gt = x >= (1 << shift)
+        k = k + jnp.where(gt, shift, 0)
+        x = jnp.where(gt, x >> shift, x)
+    return k
+
+
+def karatsuba_matmul_ref(
+    a_hi: Array, a_lo: Array, b_hi: Array, b_lo: Array, *, karatsuba: bool = True
+) -> tuple[Array, Array, Array]:
+    """(hh, mid, ll) int32 partial matmuls -- bit-exact vs kernel."""
+    dot = functools.partial(jnp.matmul, preferred_element_type=jnp.int32)
+    ah, al = a_hi.astype(jnp.int32), a_lo.astype(jnp.int32)
+    bh, bl = b_hi.astype(jnp.int32), b_lo.astype(jnp.int32)
+    hh = dot(ah, bh)
+    ll = dot(al, bl)
+    if karatsuba:
+        mid = dot(ah + al, bh + bl) - hh - ll
+    else:
+        mid = dot(ah, bl) + dot(al, bh)
+    return hh, mid, ll
+
+
+def gaussian_conv3x3_ref(
+    img: Array, kernel: Array, *, method: str = "refmlm", nbits: int = 8
+) -> Array:
+    """Shift-and-accumulate 3x3 convolution oracle -- bit-exact vs kernel."""
+    h, w = img.shape
+    padded = jnp.pad(img.astype(jnp.int32), 1)
+    mult = _tap_multiplier(method)
+    acc = jnp.zeros((h, w), jnp.int32)
+    for di in range(3):
+        for dj in range(3):
+            tap = padded[di : di + h, dj : dj + w]
+            coeff = kernel[di, dj].astype(jnp.int32)
+            acc = acc + mult(tap, jnp.broadcast_to(coeff, tap.shape), nbits)
+    return jnp.clip((acc + 128) >> 8, 0, 255)

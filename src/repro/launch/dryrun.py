@@ -1,0 +1,175 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell
+against 512 virtual host devices; dump memory/cost/collective artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all          # every runnable cell
+"""
+# The VERY FIRST two lines, before ANY other import (jax locks device count
+# on first init):
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs, supported_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model, input_specs
+from repro.roofline import analyze_compiled, model_flops
+from repro.roofline.analysis import memory_analysis_dict
+from repro.runtime import sharding as shd
+from repro.runtime.elastic import state_shardings
+from repro.runtime.serve_lib import make_prefill_step, make_serve_step
+from repro.runtime.train_lib import abstract_train_state, make_train_step
+
+HBM_PER_CHIP = 16 * 1024**3            # v5e
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               overrides: dict | None = None,
+               shape_overrides: dict | None = None):
+    """Returns (lowered, compiled, meta) for one dry-run cell."""
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if shape_overrides:
+        shape = dataclasses.replace(shape, **shape_overrides)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rng = jax.random.PRNGKey(0)
+    abstract_params = jax.eval_shape(model.init, rng)
+    n_params = int(sum(p.size for p in jax.tree.leaves(abstract_params)))
+
+    with mesh, shd.activation_sharding_ctx(mesh, cfg, multi_pod=multi_pod):
+        if shape.kind == "train":
+            state = abstract_train_state(model, rng)
+            batch = input_specs(cfg, shape)
+            st_sh = state_shardings(state, cfg, mesh, multi_pod=multi_pod)
+            b_sh = shd.batch_shardings(batch, cfg, mesh, multi_pod=multi_pod)
+            step_fn = make_train_step(model)
+            jitted = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None), donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+        else:
+            p_sh = shd.param_shardings(abstract_params, cfg, mesh,
+                                       multi_pod=multi_pod)
+            s_max = shape.seq_len
+            caches = jax.eval_shape(lambda: model.init_cache(
+                shape.global_batch, s_max))
+            c_sh = shd.cache_shardings(caches, cfg, mesh, multi_pod=multi_pod)
+            if shape.kind == "prefill":
+                batch = input_specs(cfg, shape)
+                b_sh = shd.batch_shardings(batch, cfg, mesh, multi_pod=multi_pod)
+                step_fn = make_prefill_step(model)
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(p_sh, b_sh, c_sh),
+                                 out_shardings=(None, c_sh, None),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(abstract_params, batch, caches)
+            else:                                   # decode
+                tokens = input_specs(cfg, shape)["tokens"]
+                t_sh = shd.batch_shardings(tokens, cfg, mesh, multi_pod=multi_pod)
+                step_fn = make_serve_step(model, seq_len=shape.seq_len)
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(p_sh, t_sh, c_sh),
+                                 out_shardings=(None, c_sh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(abstract_params, tokens, caches)
+        compiled = lowered.compile()
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+            "chips": 512 if multi_pod else 256, "n_params": n_params,
+            "model_flops": model_flops(cfg, n_params, shape)}
+    return lowered, compiled, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    t0 = time.perf_counter()
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name,
+                                             multi_pod=multi_pod,
+                                             overrides=overrides)
+        mem = memory_analysis_dict(compiled)
+        report = analyze_compiled(compiled, model_flops_val=meta["model_flops"],
+                                  chips=meta["chips"])
+        per_dev_bytes = sum(v for v in
+                            (mem.get("argument_size_in_bytes"),
+                             mem.get("temp_size_in_bytes")) if v)
+        rec = {
+            **meta, "tag": tag, "status": "ok",
+            "compile_s": round(time.perf_counter() - t0, 1),
+            "memory_analysis": mem,
+            "fits_hbm": (per_dev_bytes <= HBM_PER_CHIP) if per_dev_bytes else None,
+            "roofline": report.to_json(),
+        }
+    except Exception as e:                         # noqa: BLE001 - report, don't die
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+               "tag": tag, "status": "error",
+               "compile_s": round(time.perf_counter() - t0, 1),
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{rec['mesh']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch in ("all",) else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        support = supported_shapes(cfg)
+        shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+        for shape_name in shapes:
+            if support[shape_name] != "ok":
+                print(f"SKIP {arch} {shape_name}: {support[shape_name]}")
+                n_skip += 1
+                continue
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, multi_pod=mp, out_dir=args.out)
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    r = rec["roofline"]
+                    print(f"OK   {arch} {shape_name} {rec['mesh']} "
+                          f"compile={rec['compile_s']}s "
+                          f"flops/dev={r['flops']:.3e} "
+                          f"coll={r['coll_bytes']:.3e}B "
+                          f"bottleneck={r['bottleneck']}")
+                    ma = rec.get("memory_analysis") or {}
+                    if ma.get("argument_size_in_bytes"):
+                        print(f"     memory: args={ma['argument_size_in_bytes']:.3e} "
+                              f"temp={ma.get('temp_size_in_bytes', 0):.3e} "
+                              f"fits_hbm={rec['fits_hbm']}")
+                else:
+                    n_err += 1
+                    print(f"FAIL {arch} {shape_name} {rec['mesh']}: {rec['error']}")
+    print(f"\ndry-run summary: ok={n_ok} fail={n_err} skipped-cells={n_skip}")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production meshes (assignment §dry-run).
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax init; the
+smoke tests must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int | None = None, model: int = 1):
+    """CPU-scale mesh over whatever devices exist (examples / tests)."""
+    n = len(jax.devices())
+    data = data if data is not None else n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,53 @@
+"""Runnable serving driver (CPU-scale): batched prefill + greedy decode.
+
+Exercises exactly the code path the decode_* dry-run cells lower: sharded
+KV/SSM caches, prefill step, single-token decode steps.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.runtime import sharding as shd
+from repro.runtime.serve_lib import greedy_generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if not cfg.causal:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode path (per spec)")
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+
+    with mesh, shd.activation_sharding_ctx(mesh, cfg, multi_pod=False):
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompt = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+            jnp.int32)
+        t0 = time.perf_counter()
+        out = greedy_generate(model, params, prompt, steps=args.gen_len,
+                              s_max=args.prompt_len + args.gen_len)
+        dt = time.perf_counter() - t0
+    toks = args.batch * args.gen_len
+    print(f"generated {out.shape} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, batch={args.batch})")
+    print("sample token ids:", np.asarray(out[0])[:16])
+
+
+if __name__ == "__main__":
+    main()

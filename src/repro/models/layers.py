@@ -1,0 +1,305 @@
+"""Core transformer layers: norms, RoPE, GQA / MLA / cross attention, MLPs.
+
+Pure-JAX, pytree params. Every linear goes through `dense()`, which routes
+to `repro.core.matmul` so the paper's multiplier family is a first-class
+backend for every architecture (cfg.matmul_method).
+
+Conventions:
+  x: (B, S, D)  activations, cfg.dtype
+  params are plain dicts; initializers take an `rng` and return f32 arrays
+  (cast to compute dtype at use; master weights stay f32 for the optimizer).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.approx_matmul import matmul as core_matmul
+from repro.runtime.sharding import shard_hint
+
+Params = dict[str, Any]
+
+
+# ----------------------------------------------------------------- dense ----
+def dense_init(rng, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: Params, x: Array, *, method: str = "exact") -> Array:
+    w = p["w"].astype(x.dtype)
+    if method == "exact":
+        y = x @ w
+    else:
+        y = core_matmul(x.reshape(-1, x.shape[-1]), w, method).reshape(
+            *x.shape[:-1], w.shape[-1]
+        ).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- norms ----
+def norm_init(d: int, kind: str = "rmsnorm") -> Params:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, x: Array, kind: str = "rmsnorm", eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ----
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ------------------------------------------------------------- attention ----
+def _sdpa(q: Array, k: Array, v: Array, *, causal: bool, q_offset: Array | None,
+          softcap: float = 0.0, chunk_q: int = 1024,
+          valid_mask: Array | None = None,
+          scores_dtype=jnp.float32) -> Array:
+    """Scaled dot-product attention, GQA-aware, q-chunked for long prefill.
+
+    q: (B, Sq, Hq, Dh); k,v: (B, Sk, Hkv, Dh). Hq % Hkv == 0.
+    q_offset: (B,) start position of q within the kv sequence (prefill: 0;
+    decode: cache length). valid_mask: (B, Sk) extra key-validity mask
+    (sliding-window caches). Chunking over Sq bounds the (Sq, Sk) score
+    materialization to (chunk_q, Sk) -- the pure-JAX flash pattern.
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                 # MLA scores in (r+dr) but emits r dims
+    groups = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    offset = jnp.zeros((b,), jnp.int32) if q_offset is None else q_offset
+
+    def block(q_blk: Array, qpos: Array) -> Array:
+        # q_blk: (B, c, Hq, Dh); qpos: (c,) relative positions
+        qg = q_blk.reshape(b, q_blk.shape[1], hkv, groups, dh)
+        s = jnp.einsum("bchgd,bkhd->bhgck", qg, k).astype(scores_dtype) * scale
+        neg = jnp.asarray(-3e4 if scores_dtype == jnp.bfloat16 else -1e30,
+                          scores_dtype)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        if causal:
+            qp = offset[:, None] + qpos[None, :]               # (B, c)
+            mask = qp[:, None, None, :, None] >= jnp.arange(sk)[None, None, None, None, :]
+            s = jnp.where(mask, s, neg)
+        if valid_mask is not None:
+            s = jnp.where(valid_mask[:, None, None, None, :], s, neg)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)     # stable: max-sub
+        o = jnp.einsum("bhgck,bkhd->bchgd", p, v)
+        return o.reshape(b, q_blk.shape[1], hq, dv)
+
+    if sq <= chunk_q or sq % chunk_q != 0:
+        return block(q, jnp.arange(sq, dtype=jnp.int32))
+    qs = q.reshape(b, sq // chunk_q, chunk_q, hq, dh).swapaxes(0, 1)
+    pos = jnp.arange(sq, dtype=jnp.int32).reshape(-1, chunk_q)
+
+    def scan_body(_, xs):
+        q_blk, qpos = xs
+        return None, block(q_blk, qpos)
+
+    _, outs = jax.lax.scan(scan_body, None, (qs, pos))
+    return outs.swapaxes(0, 1).reshape(b, sq, hq, dv)
+
+
+def gqa_init(rng, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d),
+    }
+
+
+def gqa_attention(p: Params, x: Array, cfg, *, positions: Array,
+                  kv_cache: Params | None = None, cache_len: Array | None = None,
+                  kv_override: tuple[Array, Array] | None = None) -> tuple[Array, Params | None]:
+    """GQA self-attention (or cross-attention when kv_override is given).
+
+    Returns (out, new_kv_cache). kv_cache = {"k","v"}: (B, S_max, Hkv, Dh).
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    mm = cfg.matmul_method
+    q = dense(p["wq"], x, method=mm).reshape(b, s, cfg.num_heads, hd)
+    q = shard_hint(q, "batch", None, "tp", None)
+    if kv_override is None:
+        k = dense(p["wk"], x, method=mm).reshape(b, s, cfg.num_kv_heads, hd)
+        v = dense(p["wv"], x, method=mm).reshape(b, s, cfg.num_kv_heads, hd)
+        k = shard_hint(k, "batch", None, "tp", None)
+        v = shard_hint(v, "batch", None, "tp", None)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        causal = cfg.causal
+    else:
+        k, v = kv_override                 # cross-attn: precomputed image KV
+        causal = False
+
+    new_cache = None
+    q_offset = None
+    valid_mask = None
+    if kv_cache is not None and kv_override is None:
+        smax = kv_cache["k"].shape[1]
+        window = cfg.sliding_window
+        if window and smax == window:
+            # Rolling window cache: write modulo the window, attend to every
+            # written slot (RoPE phases are absolute, applied pre-cache).
+            idx = (cache_len[:, None] + jnp.arange(s)[None, :]) % window
+            written = jnp.minimum(cache_len + s, window)       # (B,)
+            valid_mask = jnp.arange(window)[None, :] < written[:, None]
+            causal = False
+        else:
+            idx = cache_len[:, None] + jnp.arange(s)[None, :]  # (B, s)
+            q_offset = cache_len
+            causal = True                 # masks unwritten slots too
+        kc = _scatter_cache(kv_cache["k"], k, idx)
+        vc = _scatter_cache(kv_cache["v"], v, idx)
+        new_cache = {"k": kc, "v": vc}
+        k, v = kc, vc
+
+    o = _sdpa(q, k, v, causal=causal, q_offset=q_offset,
+              softcap=cfg.attn_logit_softcap, valid_mask=valid_mask,
+              chunk_q=cfg.attn_chunk_q,
+              scores_dtype=jnp.dtype(cfg.attn_scores_dtype))
+    return dense(p["wo"], o.reshape(b, s, -1), method=mm), new_cache
+
+
+def _scatter_cache(cache: Array, new: Array, idx: Array) -> Array:
+    """cache (B, Smax, H, D) <- new (B, s, H, D) at per-batch positions idx."""
+    b = cache.shape[0]
+    bidx = jnp.arange(b)[:, None]
+    return cache.at[bidx, idx].set(new.astype(cache.dtype))
+
+
+# ------------------------------------------------------------------- MLA ----
+def mla_init(rng, cfg) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 6)
+    qdim = cfg.num_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+    return {
+        "wq_a": dense_init(ks[0], d, cfg.q_lora_rank),
+        "q_norm": norm_init(cfg.q_lora_rank),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, qdim),
+        "wkv_a": dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+        "kv_norm": norm_init(cfg.kv_lora_rank),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank,
+                            cfg.num_heads * (cfg.qk_nope_dim + cfg.v_head_dim)),
+        "wo": dense_init(ks[4], cfg.num_heads * cfg.v_head_dim, d),
+    }
+
+
+def mla_attention(p: Params, x: Array, cfg, *, positions: Array,
+                  kv_cache: Params | None = None, cache_len: Array | None = None
+                  ) -> tuple[Array, Params | None]:
+    """Multi-head Latent Attention (DeepSeek-V2/V3 family).
+
+    The KV cache stores only the compressed latent c_kv (kv_lora_rank) plus
+    the shared rope key (qk_rope_dim) -- 576 dims/token at full scale, the
+    architecture's long-context win. Decode uses the absorbed-q formulation
+    so per-step work is O(S * (r + rope)) per head instead of O(S * 2*Dh).
+    """
+    b, s, _ = x.shape
+    h, r = cfg.num_heads, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    mm = cfg.matmul_method
+
+    ql = apply_norm(p["q_norm"], dense(p["wq_a"], x, method=mm), cfg.norm)
+    q = dense(p["wq_b"], ql, method=mm).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = dense(p["wkv_a"], x, method=mm)                      # (B,S,r+dr)
+    c_kv = apply_norm(p["kv_norm"], kv_a[..., :r], cfg.norm)
+    k_rope = apply_rope(kv_a[..., None, r:], positions, cfg.rope_theta)  # (B,S,1,dr)
+
+    # Absorbed form: fold W_UK into q, score against the latent directly.
+    wkv_b = p["wkv_b"]["w"].astype(x.dtype).reshape(r, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]               # (r,h,dn), (r,h,dv)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)          # (B,S,h,r)
+
+    new_cache = None
+    q_offset = None
+    if kv_cache is not None:
+        idx = cache_len[:, None] + jnp.arange(s)[None, :]
+        ckv_c = _scatter_cache(kv_cache["c_kv"][..., None, :], c_kv[..., None, :], idx)[..., 0, :]
+        kr_c = _scatter_cache(kv_cache["k_rope"], k_rope, idx)
+        new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
+        c_kv_all, k_rope_all = ckv_c, kr_c
+        q_offset = cache_len
+    else:
+        c_kv_all, k_rope_all = c_kv, k_rope
+
+    # Attention in latent space: q = [q_lat ; q_rope], k = [c_kv ; k_rope].
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)           # (B,S,h,r+dr)
+    k_cat = jnp.concatenate(
+        [c_kv_all[:, :, None, :], jnp.broadcast_to(k_rope_all, (*k_rope_all.shape[:2], 1, dr))],
+        axis=-1,
+    )                                                           # (B,Sk,1,r+dr)
+    scale_fix = math.sqrt(r + dr) / math.sqrt(dn + dr)          # keep 1/sqrt(dn+dr)
+    o_lat = _sdpa(q_cat * scale_fix, k_cat, c_kv_all[:, :, None, :],
+                  causal=True, q_offset=q_offset,
+                  chunk_q=cfg.attn_chunk_q)                     # (B,S,h,r)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)               # (B,S,h,dv)
+    return dense(p["wo"], o.reshape(b, s, h * dv), method=mm), new_cache
+
+
+# ------------------------------------------------------------------- MLP ----
+def mlp_init(rng, cfg, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "wi": dense_init(ks[0], d, ff, bias=cfg.mlp_bias),
+            "wg": dense_init(ks[1], d, ff, bias=cfg.mlp_bias),
+            "wo": dense_init(ks[2], ff, d, bias=cfg.mlp_bias),
+        }
+    return {
+        "wi": dense_init(ks[0], d, ff, bias=cfg.mlp_bias),
+        "wo": dense_init(ks[2], ff, d, bias=cfg.mlp_bias),
+    }
+
+
+def mlp(p: Params, x: Array, cfg) -> Array:
+    mm = cfg.matmul_method
+    h = dense(p["wi"], x, method=mm)
+    h = shard_hint(h, "batch", None, "tp")
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x, method=mm)) * h
+    elif cfg.mlp == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp == "gelu":
+        h = jax.nn.gelu(h)
+    return dense(p["wo"], h, method=mm)

@@ -1,0 +1,162 @@
+"""Public model API: build_model(cfg) -> Model with init / forward / loss /
+prefill / decode_step / init_cache / count_params.
+
+Input contract per cfg.input_kind (the assignment's frontend-stub rule):
+  tokens        batch = {"tokens" (B,S) i32, "labels" (B,S) i32}
+  frames        batch = {"frames" (B,S,frame_dim) f32, "labels" (B,S) i32}
+                (audio: precomputed frame embeddings; encoder-only)
+  tokens+image  batch = {"tokens", "labels", "image_embeds" (B,T_img,D) f32}
+
+Loss: token cross-entropy (masked-prediction CE for the encoder) + MoE aux.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.layers import dense, dense_init
+from repro.models.transformer import backbone_apply, backbone_init, init_caches
+from repro.runtime.sharding import shard_hint
+
+Params = dict[str, Any]
+
+
+class Model(NamedTuple):
+    cfg: Any
+    init: Callable[..., Params]
+    forward: Callable[..., Array]              # (params, batch) -> logits
+    loss_fn: Callable[..., tuple[Array, dict]]
+    init_cache: Callable[..., Any]             # (batch_size, s_max, params?) -> caches
+    prefill: Callable[..., tuple[Array, Any, Array]]
+    decode_step: Callable[..., tuple[Array, Any, Array]]
+    count_params: Callable[[Params], int]
+
+
+def _embed_init(rng, cfg) -> Params:
+    ks = jax.random.split(rng, 3)
+    p: Params = {}
+    if cfg.input_kind == "frames":
+        p["frame_proj"] = dense_init(ks[0], cfg.frame_dim, cfg.d_model)
+    else:
+        p["emb"] = jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                     jnp.float32) * 0.02
+    if cfg.input_kind == "tokens+image":
+        p["img_proj"] = dense_init(ks[1], cfg.d_model, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size,
+                               scale=1.0 / cfg.d_model**0.5)
+    return p
+
+
+def _embed(params: Params, cfg, batch: dict, dtype) -> tuple[Array, Array | None]:
+    if cfg.input_kind == "frames":
+        x = dense(params["frame_proj"], batch["frames"].astype(dtype))
+        return x, None
+    x = params["emb"].astype(dtype)[batch["tokens"]]
+    img = None
+    if cfg.input_kind == "tokens+image":
+        img = dense(params["img_proj"], batch["image_embeds"].astype(dtype))
+    return x, img
+
+
+def _logits(params: Params, cfg, h: Array) -> Array:
+    if cfg.tie_embeddings:
+        logits = h @ params["emb"].astype(h.dtype).T
+    else:
+        logits = dense(params["head"], h)
+    return shard_hint(logits, "batch", None, "tp")   # vocab-sharded logits
+
+
+def build_model(cfg) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng) -> Params:
+        k_emb, k_bb = jax.random.split(rng)
+        return {**_embed_init(k_emb, cfg), "backbone": backbone_init(k_bb, cfg)}
+
+    def forward(params: Params, batch: dict) -> Array:
+        x, img = _embed(params, cfg, batch, dtype)
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32)[None, :], x.shape[:2])
+        h, _, aux = backbone_apply(params["backbone"], cfg, x,
+                                   positions=positions, image_embeds=img)
+        return _logits(params, cfg, h), aux
+
+    def loss_fn(params: Params, batch: dict) -> tuple[Array, dict]:
+        logits, aux = forward(params, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        if cfg.fused_lse_loss:
+            # §Perf: ONE logsumexp serves CE and z-loss; the picked logit
+            # comes from a one-hot contraction (f32 accumulate, no f32
+            # (B,S,V) materialization, no log_softmax buffer).
+            lse = jax.scipy.special.logsumexp(
+                logits.astype(jnp.float32), axis=-1)             # (B, S)
+            oh = jax.nn.one_hot(labels, cfg.vocab_size, dtype=logits.dtype)
+            picked = jnp.einsum("bsv,bsv->bs", logits, oh,
+                                preferred_element_type=jnp.float32)
+            nll = lse - picked
+            zl = 1e-4 * jnp.square(lse).mean()
+        else:
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+            # z-loss keeps the softmax normalizer bounded at scale (PaLM).
+            zl = 1e-4 * jnp.square(jax.scipy.special.logsumexp(
+                logits.astype(jnp.float32), axis=-1)).mean()
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        total = loss + zl + 1e-2 * aux
+        return total, {"ce": loss, "z_loss": zl, "moe_aux": aux}
+
+    def init_cache(batch_size: int, s_max: int):
+        return init_caches(cfg, batch_size, s_max, dtype)
+
+    def prefill(params: Params, batch: dict, caches) -> tuple[Array, Any, Array]:
+        """Returns (last-position logits, caches, cache_len)."""
+        x, img = _embed(params, cfg, batch, dtype)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+        cache_len = jnp.zeros((b,), jnp.int32)
+        h, new_caches, _ = backbone_apply(
+            params["backbone"], cfg, x, positions=positions, caches=caches,
+            cache_len=cache_len, image_embeds=img)
+        return _logits(params, cfg, h[:, -1:, :]), new_caches, cache_len + s
+
+    def decode_step(params: Params, tokens: Array, caches, cache_len: Array,
+                    image_embeds: Array | None = None):
+        """tokens (B, 1) -> (logits (B,1,V), caches, cache_len)."""
+        x = params["emb"].astype(dtype)[tokens] if cfg.input_kind != "frames" else None
+        img = None
+        if cfg.input_kind == "tokens+image" and image_embeds is not None:
+            img = dense(params["img_proj"], image_embeds.astype(dtype))
+        positions = cache_len[:, None] + jnp.zeros_like(tokens)
+        h, new_caches, _ = backbone_apply(
+            params["backbone"], cfg, x, positions=positions, caches=caches,
+            cache_len=cache_len, image_embeds=img, decode=True)
+        return _logits(params, cfg, h), new_caches, cache_len + tokens.shape[1]
+
+    def count_params(params: Params) -> int:
+        return int(sum(p.size for p in jax.tree.leaves(params)))
+
+    return Model(cfg, init, forward, loss_fn, init_cache, prefill,
+                 decode_step, count_params)
+
+
+def input_specs(cfg, shape, *, abstract: bool = True) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if abstract else (
+        lambda sh, dt: jnp.zeros(sh, dt))
+    if shape.kind == "decode":
+        batch = {"tokens": mk((b, 1), jnp.int32)}
+    elif cfg.input_kind == "frames":
+        batch = {"frames": mk((b, s, cfg.frame_dim), jnp.float32),
+                 "labels": mk((b, s), jnp.int32)}
+    else:
+        batch = {"tokens": mk((b, s), jnp.int32), "labels": mk((b, s), jnp.int32)}
+        if cfg.input_kind == "tokens+image" and shape.kind != "decode":
+            batch["image_embeds"] = mk((b, cfg.image_tokens, cfg.d_model), jnp.float32)
+    return batch

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: top-k router, shared + routed experts, chunked
+GShard-style capacity dispatch (deepseek-v3 / kimi-k2 families).
+
+Dispatch design (why chunked): the classic dispatch one-hot is (T, E, C) with
+C = T/E * k * cf, i.e. O(T^2 k cf) memory -- infeasible at T = 64k tokens per
+device. Chunking the token stream into `moe_seq_chunk`-sized groups makes the
+dispatch tensors O(chunk^2 k cf) per step of a lax.scan, which is a few MiB,
+while the expert matmuls keep their exact active-FLOPs cost. Tokens beyond an
+expert's per-chunk capacity are dropped (standard GShard semantics,
+cf = capacity_factor).
+
+Sharding: expert weights are (E, ...) with E on the "model" mesh axis (EP);
+the dispatch einsum contracts over tokens (sharded on "data"), so XLA lowers
+the token->expert exchange to the EP all-to-all/reduce-scatter pattern.
+
+Router: softmax over expert logits, top-k, gates renormalized over the k
+picks (deepseek-style normalization; bias-free sigmoid routing is noted in
+DESIGN.md as a deviation). Aux load-balancing loss returned for training.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.layers import dense, dense_init, mlp, mlp_init
+from repro.runtime.sharding import shard_hint
+
+Params = dict[str, Any]
+
+
+def moe_init(rng, cfg) -> Params:
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    p: Params = {
+        "router": dense_init(ks[0], d, e, scale=0.02),
+        # Routed experts, stacked on a leading expert axis (EP shard dim).
+        "wi": jax.random.normal(ks[1], (e, d, ff), jnp.float32) * scale,
+        "wg": jax.random.normal(ks[2], (e, d, ff), jnp.float32) * scale,
+        "wo": jax.random.normal(ks[3], (e, ff, d), jnp.float32) * scale,
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def _dispatch_combine(gates: Array, top_k: int, capacity: int):
+    """GShard top-k dispatch within one token chunk.
+
+    gates: (T, E) router probabilities. Returns (dispatch (T, E, C) bool-ish
+    f32, combine (T, E, C) f32) with per-expert capacity C and gates
+    renormalized over the surviving top-k picks.
+    """
+    t, e = gates.shape
+    topv, topi = jax.lax.top_k(gates, top_k)                 # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    dispatch = jnp.zeros((t, e, capacity), jnp.float32)
+    combine = jnp.zeros((t, e, capacity), jnp.float32)
+    counts = jnp.zeros((e,), jnp.int32)                      # tokens already placed
+    for k in range(top_k):
+        onehot = jax.nn.one_hot(topi[:, k], e, dtype=jnp.int32)      # (T, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]      # (T, E)
+        counts = counts + onehot.sum(0)
+        pos_tok = jnp.take_along_axis(pos, topi[:, k : k + 1], 1)[:, 0]   # (T,)
+        keep = pos_tok < capacity
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos_tok, capacity), capacity,
+                                dtype=jnp.float32)           # (T, C), drop -> all-zero
+        d_k = onehot.astype(jnp.float32)[:, :, None] * pos_oh[:, None, :]
+        dispatch = dispatch + d_k
+        combine = combine + d_k * topv[:, k][:, None, None]
+    return dispatch, combine
+
+
+def moe_block(p: Params, x: Array, cfg) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Scans over token chunks; each chunk does dispatch -> 3 expert einsums
+    (swiglu) -> combine. Shared experts run densely on all tokens.
+    """
+    b, s, d = x.shape
+    e, k, ff = cfg.num_experts, cfg.top_k, cfg.moe_d_ff
+    chunk = min(cfg.moe_seq_chunk, b * s)
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    pad = (-t) % chunk
+    tokens_p = jnp.pad(tokens, ((0, pad), (0, 0)))
+    n_chunks = tokens_p.shape[0] // chunk
+    capacity = max(1, int(chunk * k * cfg.capacity_factor / e))
+
+    wi = p["wi"].astype(x.dtype)
+    wg = p["wg"].astype(x.dtype)
+    wo = p["wo"].astype(x.dtype)
+    rw = p["router"]["w"]
+
+    def per_chunk(_, tok):
+        # Router in f32 for numerics.
+        logits = tok.astype(jnp.float32) @ rw                          # (c, E)
+        gates = jax.nn.softmax(logits, axis=-1)
+        dispatch, combine = _dispatch_combine(gates, k, capacity)
+        xe = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), tok)  # (E, C, D)
+        xe = shard_hint(xe, "expert", None, None)        # EP: experts on model
+        h = jnp.einsum("ecd,edf->ecf", xe, wi)
+        g = jnp.einsum("ecd,edf->ecf", xe, wg)
+        h = shard_hint(h, "expert", None, None)
+        ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo)        # (E, C, D)
+        ye = shard_hint(ye, "expert", None, None)
+        out = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), ye)   # (c, D)
+        # GShard aux loss terms: mean gate * mean assignment per expert.
+        me = gates.mean(0)                      # mean router prob per expert
+        ce = dispatch.sum(2).mean(0)            # mean dispatched fraction
+        aux = (me * ce).sum() * e
+        return None, (out, aux)
+
+    chunks = tokens_p.reshape(n_chunks, chunk, d)
+    if cfg.scan_unroll:
+        # roofline lowering: every chunk visible to XLA cost analysis
+        pairs = [per_chunk(None, chunks[i])[1] for i in range(n_chunks)]
+        outs = jnp.stack([p[0] for p in pairs])
+        auxs = jnp.stack([p[1] for p in pairs])
+    else:
+        _, (outs, auxs) = jax.lax.scan(per_chunk, None, chunks)
+    out = outs.reshape(-1, d)[:t].reshape(b, s, d)
+    if "shared" in p:
+        out = out + mlp(p["shared"], x, cfg)
+    return out, auxs.mean()

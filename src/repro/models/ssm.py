@@ -1,0 +1,184 @@
+"""Mamba2 (SSD) mixer -- the zamba2 hybrid's state-space block.
+
+Parallel (train/prefill) path is the chunked matmul SSD form of Dao & Gu
+2024: within-chunk attention-like term + cross-chunk recurrent state pass,
+all einsums (MXU-friendly), O(S * chunk) not O(S^2). Decode path is the O(1)
+recurrence over (H, P, N) states, which is what makes `long_500k` runnable
+for this family.
+
+Layout: d_inner = expand * d_model, H = d_inner / head_dim heads, state size
+N = cfg.ssm_state, single B/C group (G=1, noted in DESIGN.md). Depthwise
+causal conv (width cfg.ssm_conv_width) over the xBC stream, cached at decode.
+
+Sharding: heads H on the "model" axis (in/out projections are TP-sharded on
+d_inner); states are per-head so decode state shards the same way.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.layers import dense, dense_init
+from repro.runtime.sharding import shard_hint
+
+Params = dict[str, Any]
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_init(rng, cfg) -> Params:
+    d = cfg.d_model
+    d_inner, nheads, _, n = _dims(cfg)
+    ks = jax.random.split(rng, 4)
+    # Fused input projection: [z (gate), x, B, C, dt] like the reference impl.
+    d_in_proj = 2 * d_inner + 2 * n + nheads
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, d_inner + 2 * n),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d_inner + 2 * n,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, float(nheads), nheads, dtype=jnp.float32)),
+        "dt_bias": jnp.full((nheads,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d),
+    }
+
+
+def _split_proj(zxbcdt: Array, cfg):
+    d_inner, nheads, _, n = _dims(cfg)
+    z, x, bc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n], axis=-1
+    )
+    b, c = jnp.split(bc, 2, axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: Array, w: Array, bias: Array, state: Array | None):
+    """Depthwise causal conv, width K. x: (B, S, C); state: (B, K-1, C)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out + bias.astype(x.dtype)), new_state
+
+
+def _ssd_chunked(xh: Array, dt: Array, a_log: Array, bmat: Array, cmat: Array,
+                 chunk: int, h0: Array | None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) inputs; dt: (B, S, H) softplus'd steps; bmat/cmat:
+    (B, S, N); h0: (B, H, P, N) initial state or None. Returns (y, h_last).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, f"S={s} not a multiple of ssm_chunk={chunk}"
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                       # (H,) negative
+    da = dt * a[None, None, :]                                    # (B, S, H)
+
+    # Reshape into chunks. c-index = chunk, l = position in chunk.
+    dac = da.reshape(b, nc, chunk, h)
+    dtc = dt.reshape(b, nc, chunk, h)
+    xc = xh.reshape(b, nc, chunk, h, p)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(dac, axis=2)                                 # (B,nc,L,H)
+    seg_total = cum[:, :, -1, :]                                  # (B,nc,H)
+
+    # --- intra-chunk (diagonal blocks): causal decay matrix L[l, m], m <= l.
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (B,nc,L,M,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    ldec = jnp.where(causal[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcln,bcmn->bclm", cc, bc)                # (B,nc,L,M)
+    y_diag = jnp.einsum("bclm,bclmh,bcmh,bcmhp->bclhp",
+                        scores, ldec, dtc, xc)
+
+    # --- chunk states: state contribution of each chunk at its end.
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)        # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclh,bclhp->bchpn",
+                        bc, decay_to_end, dtc, xc)                # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence over nc chunk states.
+    def step(hprev, inp):
+        st, seg = inp                                             # (B,H,P,N), (B,H)
+        hnew = hprev * jnp.exp(seg)[:, :, None, None] + st
+        return hnew, hprev                                        # emit state BEFORE chunk
+
+    h_init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_before = jax.lax.scan(
+        step,
+        h_init,
+        (states.swapaxes(0, 1), seg_total.swapaxes(0, 1)),
+    )
+    h_before = h_before.swapaxes(0, 1)                            # (B,nc,H,P,N)
+
+    # --- inter-chunk output: y_off[l] = C[l] . (decay_from_start[l] * h_before)
+    decay_from_start = jnp.exp(cum)                               # (B,nc,L,H)
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp", cc, decay_from_start, h_before)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, h_last
+
+
+def mamba2_mixer(p: Params, x: Array, cfg, *, ssm_state: Array | None = None,
+                 conv_state: Array | None = None, decode: bool = False):
+    """x: (B, S, D) -> (y (B, S, D), new_ssm_state, new_conv_state).
+
+    decode=True runs the O(1) recurrence (S small, typically 1).
+    """
+    bsz, s, _ = x.shape
+    d_inner, nheads, hd, n = _dims(cfg)
+    mm = cfg.matmul_method
+
+    zxbcdt = dense(p["in_proj"], x, method=mm)
+    z, xs, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    xh = shard_hint(xs.reshape(bsz, s, nheads, hd), "batch", None, "tp", None)
+
+    if decode:
+        a = -jnp.exp(p["a_log"])                                  # (H,)
+        h = (jnp.zeros((bsz, nheads, hd, n), jnp.float32)
+             if ssm_state is None else ssm_state.astype(jnp.float32))
+        ys = []
+        for t in range(s):                                        # decode S is 1
+            dat = jnp.exp(dt[:, t] * a[None, :])                  # (B,H)
+            dbx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t],
+                             bmat[:, t].astype(jnp.float32),
+                             xh[:, t].astype(jnp.float32))
+            h = h * dat[:, :, None, None] + dbx
+            ys.append(jnp.einsum("bn,bhpn->bhp", cmat[:, t].astype(jnp.float32), h))
+        y = jnp.stack(ys, axis=1)                                 # (B,S,H,P)
+        h_last = h
+    else:
+        y, h_last = _ssd_chunked(
+            xh.astype(jnp.float32), dt, p["a_log"],
+            bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            min(cfg.ssm_chunk, s), ssm_state,
+        )
+
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    # Gated RMSNorm (mamba2's norm-before-out-proj).
+    y = y * jax.nn.silu(z)
+    ms = (y.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm_scale"]).astype(x.dtype)
+    return dense(p["out_proj"], y, method=mm), h_last, new_conv

@@ -1,0 +1,318 @@
+"""Backbone assembly: heterogeneous layer stacks compiled as a small number
+of lax.scan segments.
+
+Compile-time design: 40 (arch x shape) cells x 2 meshes must each lower +
+SPMD-partition in minutes, so the HLO must be O(#distinct block kinds), not
+O(num_layers). `segment_kinds()` compresses the per-layer kind sequence into
+(pattern, repeats) segments -- e.g. llama-3.2-vision's 100 layers become ONE
+segment with pattern (attn, attn, attn, attn, attn_cross) x 20 -- and each
+segment runs as a lax.scan over stacked params (+ stacked caches). Shared
+blocks (zamba2's weight-tied attention) close over un-stacked params inside
+the scan body.
+
+Block kinds: attn | attn_cross | moe | mamba2 | mamba2_shared | mlstm | slstm.
+Every block is pre-norm residual; remat (jax.checkpoint) wraps one whole
+pattern application when cfg.remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (apply_norm, gqa_attention, gqa_init, mla_attention,
+                                 mla_init, mlp, mlp_init, norm_init)
+from repro.runtime.sharding import shard_hint
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------- segment grouping ---
+def segment_kinds(kinds: list[str], max_pattern: int = 8) -> list[tuple[tuple[str, ...], int]]:
+    """Compress a kind sequence into (pattern, repeats) segments.
+
+    Greedy: at each position pick the pattern length p <= max_pattern that
+    consumes the most layers via repetition (ties -> smallest p).
+    """
+    segments: list[tuple[tuple[str, ...], int]] = []
+    i = 0
+    n = len(kinds)
+    while i < n:
+        best_p, best_consumed = 1, 1
+        for p in range(1, min(max_pattern, n - i) + 1):
+            pat = kinds[i : i + p]
+            reps = 1
+            while kinds[i + reps * p : i + (reps + 1) * p] == pat:
+                reps += 1
+            if reps * p > best_consumed:
+                best_p, best_consumed = p, reps * p
+        pat = tuple(kinds[i : i + best_p])
+        segments.append((pat, best_consumed // best_p))
+        i += best_consumed
+    return segments
+
+
+# ------------------------------------------------------------ block defs ----
+def _attn_init(rng, cfg):
+    return mla_init(rng, cfg) if cfg.attention == "mla" else gqa_init(rng, cfg)
+
+
+def _block_init(rng, kind: str, cfg) -> Params:
+    ks = jax.random.split(rng, 4)
+    d = cfg.d_model
+    if kind in ("attn", "moe", "attn_cross"):
+        p: Params = {"ln1": norm_init(d, cfg.norm), "attn": _attn_init(ks[0], cfg),
+                     "ln2": norm_init(d, cfg.norm)}
+        if kind == "moe":
+            p["moe"] = moe_lib.moe_init(ks[1], cfg)
+        elif cfg.d_ff:
+            p["mlp"] = mlp_init(ks[1], cfg)
+        if kind == "attn_cross":
+            p["ln_x"] = norm_init(d, cfg.norm)
+            p["xattn"] = gqa_init(ks[2], cfg)
+            p["xgate"] = jnp.zeros((), jnp.float32)   # zero-init gated cross-attn
+        return p
+    if kind in ("mamba2", "mamba2_shared"):
+        return {"ln1": norm_init(d, cfg.norm), "mixer": ssm_lib.mamba2_init(ks[0], cfg)}
+    if kind == "mlstm":
+        return {"ln1": norm_init(d, cfg.norm), "mixer": xlstm_lib.mlstm_init(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln1": norm_init(d, cfg.norm), "mixer": xlstm_lib.slstm_init(ks[0], cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _shared_block_init(rng, cfg) -> Params | None:
+    """zamba2's weight-tied attention+MLP block (applied at period)."""
+    if cfg.shared_attn_period:
+        ks = jax.random.split(rng, 2)
+        return {"ln1": norm_init(cfg.d_model, cfg.norm), "attn": gqa_init(ks[0], cfg),
+                "ln2": norm_init(cfg.d_model, cfg.norm), "mlp": mlp_init(ks[1], cfg)}
+    return None
+
+
+def _init_cache_for_kind(kind: str, cfg, batch: int, s_max: int, dtype) -> Params | None:
+    d_inner, nheads, hd, n = (0, 0, 0, 0)
+    if kind in ("mamba2", "mamba2_shared"):
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nheads = d_inner // cfg.ssm_head_dim
+        cache: Params = {
+            "ssm": jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner + 2 * cfg.ssm_state), jnp.float32),
+        }
+        if kind == "mamba2_shared":
+            win = cfg.sliding_window or s_max
+            smax = min(win, s_max)
+            hkv, hdd = cfg.num_kv_heads, cfg.resolved_head_dim
+            cache["shared_kv"] = {"k": jnp.zeros((batch, smax, hkv, hdd), dtype),
+                                  "v": jnp.zeros((batch, smax, hkv, hdd), dtype)}
+        return cache
+    if kind in ("attn", "moe", "attn_cross"):
+        if cfg.attention == "mla":
+            cache = {"c_kv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+                     "k_rope": jnp.zeros((batch, s_max, 1, cfg.qk_rope_dim), dtype)}
+        else:
+            hkv, hdd = cfg.num_kv_heads, cfg.resolved_head_dim
+            cache = {"k": jnp.zeros((batch, s_max, hkv, hdd), dtype),
+                     "v": jnp.zeros((batch, s_max, hkv, hdd), dtype)}
+        if kind == "attn_cross":
+            hkv, hdd = cfg.num_kv_heads, cfg.resolved_head_dim
+            cache["k_img"] = jnp.zeros((batch, cfg.image_tokens, hkv, hdd), dtype)
+            cache["v_img"] = jnp.zeros((batch, cfg.image_tokens, hkv, hdd), dtype)
+        return cache
+    if kind == "mlstm":
+        d_up, h, dh = xlstm_lib._mlstm_dims(cfg)
+        k = cfg.ssm_conv_width or 4
+        return {"c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, h, dh), jnp.float32),
+                "m": jnp.zeros((batch, h), jnp.float32),
+                "conv": jnp.zeros((batch, k - 1, d_up), jnp.float32)}
+    if kind == "slstm":
+        h, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+        z = jnp.zeros((batch, h, dh), jnp.float32)
+        return {"h": z, "c": z, "n": z + 1.0, "m": z}
+    return None
+
+
+def _apply_block(kind: str, p: Params, x: Array, cfg, *, positions, cache,
+                 cache_len, shared_params, image_embeds, decode: bool):
+    """One residual block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "moe", "attn_cross"):
+        h = apply_norm(p["ln1"], x, cfg.norm)
+        if cfg.attention == "mla":
+            o, new_kv = mla_attention(p["attn"], h, cfg, positions=positions,
+                                      kv_cache=cache if cache is None else
+                                      {k: cache[k] for k in ("c_kv", "k_rope")},
+                                      cache_len=cache_len)
+        else:
+            kv = None if cache is None else {k: cache[k] for k in ("k", "v")}
+            o, new_kv = gqa_attention(p["attn"], h, cfg, positions=positions,
+                                      kv_cache=kv, cache_len=cache_len)
+        x = x + o
+        new_cache = dict(new_kv) if new_kv is not None else None
+        if kind == "attn_cross":
+            hx = apply_norm(p["ln_x"], x, cfg.norm)
+            if decode and cache is not None:
+                k_img, v_img = cache["k_img"], cache["v_img"]
+            else:
+                from repro.models.layers import dense
+                bi, ti = image_embeds.shape[:2]
+                hkv, hdd = cfg.num_kv_heads, cfg.resolved_head_dim
+                k_img = dense(p["xattn"]["wk"], image_embeds,
+                              method=cfg.matmul_method).reshape(bi, ti, hkv, hdd)
+                v_img = dense(p["xattn"]["wv"], image_embeds,
+                              method=cfg.matmul_method).reshape(bi, ti, hkv, hdd)
+            ox, _ = gqa_attention(p["xattn"], hx, cfg, positions=positions,
+                                  kv_override=(k_img, v_img))
+            x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * ox
+            if new_cache is not None:
+                new_cache["k_img"], new_cache["v_img"] = k_img, v_img
+        h2 = apply_norm(p["ln2"], x, cfg.norm)
+        if kind == "moe":
+            o2, aux = moe_lib.moe_block(p["moe"], h2, cfg)
+        elif cfg.d_ff:
+            o2 = mlp(p["mlp"], h2, cfg)
+        else:
+            o2 = jnp.zeros_like(x)
+        return x + o2, new_cache, aux
+
+    if kind in ("mamba2", "mamba2_shared"):
+        h = apply_norm(p["ln1"], x, cfg.norm)
+        ssm_state = cache["ssm"] if cache is not None else None
+        conv_state = cache["conv"] if cache is not None else None
+        o, new_ssm, new_conv = ssm_lib.mamba2_mixer(
+            p["mixer"], h, cfg, ssm_state=ssm_state, conv_state=conv_state,
+            decode=decode)
+        x = x + o
+        new_cache = None
+        if cache is not None:
+            new_cache = {"ssm": new_ssm,
+                         "conv": new_conv if new_conv is not None else cache["conv"]}
+        if kind == "mamba2_shared":
+            sp = shared_params
+            hh = apply_norm(sp["ln1"], x, cfg.norm)
+            kv = cache["shared_kv"] if cache is not None else None
+            o, new_kv = gqa_attention(sp["attn"], hh, cfg, positions=positions,
+                                      kv_cache=kv, cache_len=cache_len)
+            x = x + o
+            x = x + mlp(sp["mlp"], apply_norm(sp["ln2"], x, cfg.norm), cfg)
+            if new_cache is not None:
+                new_cache["shared_kv"] = dict(new_kv) if new_kv is not None else cache["shared_kv"]
+        return x, new_cache, aux
+
+    if kind == "mlstm":
+        h = apply_norm(p["ln1"], x, cfg.norm)
+        o, new_state = xlstm_lib.mlstm_block_apply(p["mixer"], h, cfg,
+                                                   state=cache, decode=decode)
+        new_cache = new_state if cache is not None else None
+        return x + o, new_cache, aux
+
+    if kind == "slstm":
+        h = apply_norm(p["ln1"], x, cfg.norm)
+        o, new_state = xlstm_lib.slstm_apply(p["mixer"], h, cfg, state=cache)
+        new_cache = new_state if cache is not None else None
+        return x + o, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------- backbone -----
+def backbone_init(rng, cfg) -> Params:
+    segments = segment_kinds(cfg.block_kinds())
+    ks = jax.random.split(rng, len(segments) + 1)
+    params: Params = {"segments": [], "final_ln": norm_init(cfg.d_model, cfg.norm)}
+    shared = _shared_block_init(ks[-1], cfg)
+    if shared is not None:
+        params["shared_block"] = shared
+    for si, (pattern, reps) in enumerate(segments):
+        pat_keys = jax.random.split(ks[si], reps)
+        stacked = jax.vmap(
+            lambda k: tuple(_block_init(kk, kind, cfg)
+                            for kk, kind in zip(jax.random.split(k, len(pattern)), pattern))
+        )(pat_keys)
+        params["segments"].append(stacked)
+    return params
+
+
+def init_caches(cfg, batch: int, s_max: int, dtype) -> list:
+    segments = segment_kinds(cfg.block_kinds())
+    caches = []
+    for pattern, reps in segments:
+        per_pos = tuple(_init_cache_for_kind(kind, cfg, batch, s_max, dtype)
+                        for kind in pattern)
+        stacked = jax.tree.map(
+            lambda c: jnp.broadcast_to(c, (reps, *c.shape)).copy(), per_pos)
+        caches.append(stacked)
+    return caches
+
+
+def backbone_apply(params: Params, cfg, x: Array, *, positions: Array,
+                   caches: list | None = None, cache_len: Array | None = None,
+                   image_embeds: Array | None = None, decode: bool = False):
+    """x: (B, S, D) -> (y, new_caches, aux_loss_sum)."""
+    segments = segment_kinds(cfg.block_kinds())
+    shared = params.get("shared_block")
+    new_caches: list | None = [] if caches is not None else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, (pattern, reps) in enumerate(segments):
+        seg_params = params["segments"][si]
+        seg_cache = caches[si] if caches is not None else None
+
+        def pattern_step(x_in, layer_params, layer_cache):
+            # Re-pin the activation sharding inside the scan+remat body --
+            # GSPMD loses the batch axis through the loop carry otherwise.
+            x_in = shard_hint(x_in, "batch", None, None)
+            new_layer_cache = []
+            aux_acc = jnp.zeros((), jnp.float32)
+            for pi, kind in enumerate(pattern):
+                c = layer_cache[pi] if layer_cache is not None else None
+                x_in, nc, aux = _apply_block(
+                    kind, layer_params[pi], x_in, cfg, positions=positions,
+                    cache=c, cache_len=cache_len, shared_params=shared,
+                    image_embeds=image_embeds, decode=decode)
+                new_layer_cache.append(nc)
+                aux_acc = aux_acc + aux
+            return x_in, tuple(new_layer_cache), aux_acc
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            pattern_step = jax.checkpoint(pattern_step, policy=policy)
+
+        def scan_body(carry, xs):
+            x_c, aux_c = carry
+            if seg_cache is not None:
+                lp, lc = xs
+            else:
+                lp, lc = xs, None
+            x_c, nc, aux = pattern_step(x_c, lp, lc)
+            return (x_c, aux_c + aux), nc
+
+        xs = (seg_params, seg_cache) if seg_cache is not None else seg_params
+        if cfg.scan_unroll:
+            # Python-unrolled (roofline lowering): every layer visible to
+            # XLA cost analysis. Only used at small layer counts.
+            ys = []
+            carry = (x, aux_total)
+            for i in range(reps):
+                xi = jax.tree.map(lambda a: a[i], xs)
+                carry, nc = scan_body(carry, xi)
+                ys.append(nc)
+            (x, aux_total) = carry
+            seg_new_cache = (jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+                             if ys and ys[0] is not None else None)
+        else:
+            (x, aux_total), seg_new_cache = jax.lax.scan(
+                scan_body, (x, aux_total), xs)
+        if new_caches is not None:
+            new_caches.append(seg_new_cache)
+
+    x = apply_norm(params["final_ln"], x, cfg.norm)
+    return x, new_caches, aux_total

@@ -1,0 +1,231 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel + O(1) recurrent form) and
+sLSTM (scalar memory, time-scan) -- Beck et al. 2024, arXiv:2405.04517.
+
+xlstm-1.3b has no separate FFN (d_ff = 0): the mLSTM block carries its own
+up-projection (cfg.mlstm_proj_factor) and gated down-projection, sLSTM blocks
+are post-up-projection. Both are residual pre-norm blocks assembled in
+transformer.py.
+
+Parallel mLSTM is the stabilized quadratic form (the paper's eq.
+"C[t,s] = (q_t k_s / sqrt(d)) * exp(u_s - max_u)"), q-chunked like attention
+so 32k prefill never materializes the full S^2 matrix. Decode keeps the
+(H, Dk, Dv) matrix memory + normalizer + stabilizer -- O(1) per token, which
+is why `long_500k` runs for this arch.
+
+Sharding: heads on "model"; the mLSTM matrix state shards on heads when
+H % model == 0, else on Dk (sharding.py fallback rules).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.layers import dense, dense_init
+from repro.runtime.sharding import shard_hint
+
+Params = dict[str, Any]
+
+
+def _mlstm_dims(cfg):
+    d_up = int(cfg.mlstm_proj_factor * cfg.d_model)
+    nheads = cfg.num_heads
+    return d_up, nheads, d_up // nheads
+
+
+def mlstm_init(rng, cfg) -> Params:
+    d = cfg.d_model
+    d_up, nheads, _ = _mlstm_dims(cfg)
+    ks = jax.random.split(rng, 7)
+    dh = d_up // nheads
+    # q/k/v are BLOCK-DIAGONAL per head (xLSTM paper's BlockDiagonal linear):
+    # (H, dh, dh) instead of (d_up, d_up) -- 1/H of the dense param count.
+    bd = lambda k: jax.random.normal(k, (nheads, dh, dh), jnp.float32) / jnp.sqrt(dh)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_up),       # [main ; gate]
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width or 4, d_up),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d_up,), jnp.float32),
+        "wq": bd(ks[2]),
+        "wk": bd(ks[3]),
+        "wv": bd(ks[4]),
+        "w_if": dense_init(ks[5], d_up, 2 * nheads, bias=True),
+        "norm_scale": jnp.ones((d_up,), jnp.float32),
+        "down_proj": dense_init(ks[6], d_up, d),
+    }
+
+
+def _causal_conv1d(x: Array, w: Array, b: Array, state: Array | None):
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(k))
+    return jax.nn.silu(out + b.astype(x.dtype)), xp[:, -(k - 1):, :]
+
+
+def _mlstm_parallel(q: Array, k: Array, v: Array, i_raw: Array, f_raw: Array,
+                    chunk_q: int = 256) -> Array:
+    """Stabilized parallel mLSTM. q/k/v: (B,S,H,Dh); gates (B,S,H) pre-act."""
+    b, s, h, dh = q.shape
+    # NOTE: k already carries the 1/sqrt(dh) factor (applied at projection,
+    # shared with the recurrent/decode path) -- no extra scale here.
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))            # (B,S,H)
+    lcum = jnp.cumsum(lf, axis=1)
+    u = i_raw.astype(jnp.float32) - lcum                          # (B,S,H)
+    m = jax.lax.cummax(u, axis=1)                                 # running max of u
+    m_true = lcum + m                                             # true stabilizer m_t
+
+    def block(q_blk, m_blk, mt_blk, pos):
+        # decay D[t,s] = exp(u_s - m'_t) for s <= t (lcum_t cancels via u, m')
+        dmat = jnp.exp(u[:, None, :, :] - m_blk[:, :, None, :])   # (B,c,S,H)
+        mask = pos[None, :, None] >= jnp.arange(s)[None, None, :]  # (1,c,S)
+        dmat = jnp.where(mask[..., None], dmat, 0.0)
+        scores = jnp.einsum("bchd,bshd->bcsh", q_blk.astype(jnp.float32),
+                            k.astype(jnp.float32))
+        cmat = scores * dmat                                      # (B,c,S,H)
+        # clamp uses the TRUE stabilizer m_t = lcum_t + m'_t (matches decode)
+        norm = jnp.maximum(jnp.abs(cmat.sum(2)), jnp.exp(-mt_blk)) + 1e-6
+        out = jnp.einsum("bcsh,bshd->bchd", cmat, v.astype(jnp.float32))
+        return out / norm[..., None]
+
+    if s <= chunk_q:
+        return block(q, m, m_true, jnp.arange(s)).astype(q.dtype)
+    assert s % chunk_q == 0
+    nc = s // chunk_q
+    qs = q.reshape(b, nc, chunk_q, h, dh).swapaxes(0, 1)
+    ms = m.reshape(b, nc, chunk_q, h).swapaxes(0, 1)
+    mts = m_true.reshape(b, nc, chunk_q, h).swapaxes(0, 1)
+    pos = jnp.arange(s).reshape(nc, chunk_q)
+
+    def body(_, xs):
+        qb, mb, mtb, pb = xs
+        return None, block(qb, mb, mtb, pb)
+
+    _, outs = jax.lax.scan(body, None, (qs, ms, mts, pos))
+    return outs.swapaxes(0, 1).reshape(b, s, h, dh).astype(q.dtype)
+
+
+def mlstm_block_apply(p: Params, x: Array, cfg, *, state: Params | None = None,
+                      decode: bool = False):
+    """x (B,S,D) -> (y (B,S,D), new_state). State: {"c","n","m","conv"}."""
+    b, s, _ = x.shape
+    d_up, h, dh = _mlstm_dims(cfg)
+    mm = cfg.matmul_method
+
+    up = dense(p["up_proj"], x, method=mm)
+    xm, zg = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv1d(xm, p["conv_w"], p["conv_b"], conv_state)
+
+    xch = xc.reshape(b, s, h, dh)
+    xmh = xm.reshape(b, s, h, dh)
+    bd = lambda w, t: jnp.einsum("bshd,hde->bshe", t, w.astype(t.dtype))
+    q = shard_hint(bd(p["wq"], xch), "batch", None, "tp", None)
+    k = shard_hint(bd(p["wk"], xch), "batch", None, "tp", None) / math.sqrt(dh)
+    v = shard_hint(bd(p["wv"], xmh), "batch", None, "tp", None)
+    gif = dense(p["w_if"], xc, method=mm).astype(jnp.float32)
+    i_raw, f_raw = gif[..., :h], gif[..., h:]
+
+    if decode:
+        c0 = state["c"].astype(jnp.float32)                        # (B,H,Dk,Dv)
+        n0 = state["n"].astype(jnp.float32)                        # (B,H,Dk)
+        m0 = state["m"].astype(jnp.float32)                        # (B,H)
+        ys = []
+        for t in range(s):
+            lf = jax.nn.log_sigmoid(f_raw[:, t])                   # (B,H)
+            m1 = jnp.maximum(lf + m0, i_raw[:, t])
+            a = jnp.exp(lf + m0 - m1)[:, :, None]
+            bgt = jnp.exp(i_raw[:, t] - m1)[:, :, None]
+            kt = k[:, t].astype(jnp.float32)                       # (B,H,Dk)
+            vt = v[:, t].astype(jnp.float32)                       # (B,H,Dv)
+            qt = q[:, t].astype(jnp.float32)
+            c0 = a[..., None] * c0 + bgt[..., None] * kt[..., :, None] * vt[..., None, :]
+            n0 = a * n0 + bgt * kt
+            m0 = m1
+            num = jnp.einsum("bhk,bhkv->bhv", qt, c0)
+            den = jnp.maximum(jnp.abs((qt * n0).sum(-1)), jnp.exp(-m0)) + 1e-6
+            ys.append(num / den[..., None])                        # (B,H,Dv)
+        y = jnp.stack(ys, axis=1)                                  # (B,S,H,Dv)
+        new_state = {"c": c0, "n": n0, "m": m0, "conv": new_conv}
+    else:
+        y = _mlstm_parallel(q, k, v, i_raw, f_raw,
+                            chunk_q=min(cfg.attn_chunk_q, 256)
+                            if not cfg.scan_unroll else x.shape[1])
+        # Rebuild final state so prefill can hand off to decode.
+        lf = jax.nn.log_sigmoid(f_raw)
+        lcum = jnp.cumsum(lf, axis=1)
+        u = i_raw - lcum
+        m_last = jnp.max(u, axis=1) + lcum[:, -1]                  # (B,H)
+        wts = jnp.exp(lcum[:, -1][:, None] - lcum + i_raw - m_last[:, None])
+        kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)           # (B,H,S,Dk)
+        vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+        wf = wts.transpose(0, 2, 1)                                # (B,H,S)
+        c_last = jnp.einsum("bhs,bhsk,bhsv->bhkv", wf, kf, vf)
+        n_last = jnp.einsum("bhs,bhsk->bhk", wf, kf)
+        new_state = {"c": c_last, "n": n_last, "m": m_last, "conv": new_conv}
+
+    y = y.reshape(b, s, d_up)
+    ms = (y.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm_scale"]).astype(x.dtype)
+    y = y * jax.nn.silu(zg)
+    return dense(p["down_proj"], y, method=mm), new_state
+
+
+# --------------------------------------------------------------- sLSTM ------
+def slstm_init(rng, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(rng, 3)
+    return {
+        # 4 gates (z, i, f, o) from input and block-diagonal recurrent weights.
+        "w_in": dense_init(ks[0], d, 4 * d, bias=True),
+        "r_rec": jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32) / math.sqrt(dh),
+        "out_norm": jnp.ones((d,), jnp.float32),
+        "w_out": dense_init(ks[2], d, d),
+    }
+
+
+def slstm_apply(p: Params, x: Array, cfg, *, state: Params | None = None):
+    """sLSTM with exponential gating, lax.scan over time.
+
+    State: {"h","c","n","m"} each (B, H, Dh) except m (B, H, Dh)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    mm = cfg.matmul_method
+    gates_in = dense(p["w_in"], x, method=mm).astype(jnp.float32)  # (B,S,4D)
+    r = p["r_rec"]
+
+    if state is None:
+        zeros = jnp.zeros((b, h, dh), jnp.float32)
+        state = {"h": zeros, "c": zeros, "n": zeros + 1.0, "m": zeros}
+
+    def step(carry, g_t):
+        hp, cp, np_, mp = carry["h"], carry["c"], carry["n"], carry["m"]
+        rec = jnp.einsum("bhd,hdg->bhg", hp, r)                    # (B,H,4Dh)
+        g = g_t.reshape(b, h, 4 * dh) + rec
+        zr, ir, fr, orr = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(zr)
+        o = jax.nn.sigmoid(orr)
+        lf = jax.nn.log_sigmoid(fr)
+        m1 = jnp.maximum(lf + mp, ir)
+        i_g = jnp.exp(ir - m1)
+        f_g = jnp.exp(lf + mp - m1)
+        c1 = f_g * cp + i_g * z
+        n1 = f_g * np_ + i_g
+        h1 = o * c1 / jnp.maximum(n1, 1e-6)
+        return {"h": h1, "c": c1, "n": n1, "m": m1}, h1
+
+    new_state, hs = jax.lax.scan(step, state, gates_in.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, s, d)
+    ms = (y ** 2).mean(-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]).astype(x.dtype)
+    return dense(p["w_out"], y, method=mm), new_state

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, adafactor, adamw, get_optimizer
+from repro.optim.schedules import cosine_schedule

@@ -1,0 +1,114 @@
+"""Sharded optimizers: AdamW (full 1st+2nd moment) and Adafactor (factored
+2nd moment, no 1st moment) for the 340B+ configs where full AdamW state
+cannot fit a 256-chip pod.
+
+State trees mirror the parameter tree with state-kind keys nested UNDER the
+param's path (params/.../wq/w -> {"m": .., "v": ..}), so runtime.sharding can
+reuse the parameter logical-axis derivation for every state leaf.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def _map_with_state(fn, grads, state_tree, params):
+    """Map fn(g, s, p) -> (new_p, new_s) where state leaves are dicts."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    s_leaves = treedef.flatten_up_to(state_tree)
+    p_leaves = treedef.flatten_up_to(params)
+    new_p, new_s = [], []
+    for g, s, p in zip(g_leaves, s_leaves, p_leaves):
+        np_, ns_ = fn(g, s, p)
+        new_p.append(np_)
+        new_s.append(ns_)
+    return treedef.unflatten(new_p), treedef.unflatten(new_s)
+
+
+def adamw(*, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "state": jax.tree.map(lambda p: {"m": jnp.zeros(p.shape, jnp.float32),
+                                             "v": jnp.zeros(p.shape, jnp.float32)},
+                                  params),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            m = b1 * s["m"] + (1 - b1) * g
+            v = b2 * s["v"] + (1 - b2) * g * g
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            new_p = (p.astype(jnp.float32) - lr * (step + weight_decay * p)).astype(p.dtype)
+            return new_p, {"m": m, "v": v}
+
+        new_params, new_state = _map_with_state(upd, grads, state["state"], params)
+        return new_params, {"count": count, "state": new_state}
+
+    return Optimizer(init, update)
+
+
+def adafactor(*, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    """Factored 2nd-moment Adafactor (momentum-free): state per (m, n)
+    matrix is m + n floats instead of 2*m*n -- the difference between a
+    340B/671B/1T config fitting a pod or not."""
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"count": jnp.zeros((), jnp.int32),
+                "state": jax.tree.map(one, params)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = vr[..., None] * vc[..., None, :] / (
+                    vr.sum(-1, keepdims=True)[..., None] + eps)
+                step = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS of step <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(step * step) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr * (step + weight_decay * p)).astype(p.dtype)
+            return new_p, new_s
+
+        new_params, new_state = _map_with_state(upd, grads, state["state"], params)
+        return new_params, {"count": count, "state": new_state}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

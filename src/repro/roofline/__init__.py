@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, RooflineReport, analyze_compiled,
+                                     collective_bytes, model_flops)

@@ -1,0 +1,167 @@
+"""Three-term roofline from a compiled (SPMD-partitioned) XLA module.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = collective operand bytes_per_device / ICI link bw
+
+cost_analysis() on the partitioned module reports PER-DEVICE flops/bytes
+(the module is the single-device SPMD program), so the "/chips" in the
+assignment formulas is already applied. Collective bytes are not in
+cost_analysis: we parse the optimized HLO and sum operand sizes of
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+(shapes in the partitioned module are per-shard, so this too is per-device
+wire traffic, counted once per op).
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment-given).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float                        # per-device HLO flops
+    hbm_bytes: float                    # per-device HLO bytes accessed
+    coll_bytes: float                   # per-device collective operand bytes
+    coll_breakdown: dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0            # 6*N*D useful flops (global)
+    useful_ratio: float = 0.0           # model_flops / (flops * chips)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """bytes of one HLO shape literal like 'bf16[256,1024]{1,0}'."""
+    total = 0.0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> tuple[float, dict[str, float]]:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Using the RESULT shape: for all-reduce it equals operand bytes; for
+    all-gather it is the post-gather (wire-received) size; for
+    reduce-scatter the pre-reduce traffic is the operand, but ring RS moves
+    ~operand bytes once over the ring -- result-shape is the conservative
+    per-device received-bytes proxy for every op kind.
+    """
+    total = 0.0
+    breakdown: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    #  %name = <shape or tuple> op-name(...)
+    pat = re.compile(
+        r"=\s*((?:\([^)]*\))|(?:[\w\[\],{}:#*\s]+?))\s*"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\(")
+    for m in pat.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        total += b
+        breakdown[op] += b
+    # -start/-done pairs would double count: halve ops seen twice.
+    return total, breakdown
+
+
+def _cost_get(cost: Any, key: str) -> float:
+    try:
+        v = cost[key]
+        return float(v)
+    except (KeyError, TypeError):
+        return 0.0
+
+
+def analyze_compiled(compiled, *, hw: HW = HW(), model_flops_val: float = 0.0,
+                     chips: int = 1) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # some backends return [dict]
+        cost = cost[0]
+    flops = _cost_get(cost, "flops")
+    hbm = _cost_get(cost, "bytes accessed")
+    if hbm == 0.0:
+        # CPU backend sometimes omits the aggregate; sum operand outputs.
+        hbm = sum(float(v) for k, v in dict(cost).items()
+                  if k.startswith("bytes accessed"))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll, breakdown = collective_bytes(hlo)
+    compute_s = flops / hw.peak_flops
+    memory_s = hbm / hw.hbm_bw
+    collective_s = coll / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineReport(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll, coll_breakdown=breakdown,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops_val,
+        useful_ratio=(model_flops_val / (flops * chips)) if flops else 0.0,
+    )
+
+
+def model_flops(cfg, n_params: int, shape) -> float:
+    """6*N*D with N = active params (MoE: total minus inactive experts).
+
+    For decode shapes D = global_batch tokens (one step); for train/prefill
+    D = global_batch * seq_len. Backward pass (train) is the standard 3x
+    forward -> the 6 factor; prefill/decode use 2*N*D (forward only).
+    """
+    n_active = n_params - cfg.inactive_expert_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch          # one new token per row
+    return 2.0 * n_active * tokens
+
+
+def memory_analysis_dict(compiled) -> dict:
+    """memory_analysis() fields as a plain dict (None-safe on CPU)."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+        out[field] = getattr(ma, field, None)
+    return out

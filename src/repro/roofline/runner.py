@@ -1,0 +1,215 @@
+"""Roofline table driver: exact extrapolated per-cell terms.
+
+XLA's HloCostAnalysis counts a while/scan body ONCE regardless of trip
+count, so cost_analysis() of the production program under-reports layer
+work. Recovery: lower 2-3 UNROLLED tiny-layer-count variants of the same
+cell (scan_unroll=True); flops/bytes/collective-bytes are exactly affine in
+the per-kind layer counts, so the variants give (base, marginal-per-kind)
+and the true-config totals follow:
+
+  dense/audio   f(L) = base + L*m                      (2 lowers)
+  vlm/zamba2/   f = base + n_periods*m_period [+ tail  (2-3 lowers)
+  xlstm                  layers * m_layer]
+  moe           f = base + n_dense*m_attn + n_moe*m_moe (3 lowers)
+
+Validated against a fully-unrolled full-config lowering in tests
+(test_roofline_extrapolation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+from repro.configs import SHAPES, get_config
+from repro.roofline.analysis import HW, analyze_compiled, model_flops
+
+
+def _terms(compiled) -> dict[str, float]:
+    r = analyze_compiled(compiled)
+    return {"flops": r.flops, "hbm_bytes": r.hbm_bytes,
+            "coll_bytes": r.coll_bytes}
+
+
+def _lower_terms(arch: str, shape_name: str, overrides: dict,
+                 multi_pod: bool = False,
+                 shape_overrides: dict | None = None) -> dict[str, float]:
+    from repro.launch.dryrun import lower_cell
+    # scan_unroll + attn_chunk_q=seq + microbatches=1: every inner loop
+    # visible to XLA cost analysis (traffic/flops identical to the chunked/
+    # accumulated production program up to per-microbatch weight re-reads;
+    # only the *peak* differs, which comes from the production compile).
+    # remat stays at production value so recompute flops are included.
+    seq = SHAPES[shape_name].seq_len
+    _, compiled, _ = lower_cell(
+        arch, shape_name, multi_pod=multi_pod,
+        overrides={**overrides, "scan_unroll": True, "attn_chunk_q": seq,
+                   "microbatches": 1},
+        shape_overrides=shape_overrides)
+    return _terms(compiled)
+
+
+def _affine(f1, f2, n1: float, n2: float, n_true: float):
+    """f is affine in n: f(n) = f(n1) + (f(n2)-f(n1)) * (n-n1)/(n2-n1)."""
+    return {k: f1[k] + (f2[k] - f1[k]) * (n_true - n1) / (n2 - n1) for k in f1}
+
+
+def _layer_extrapolated(arch: str, shape_name: str, ov: dict,
+                        shape_ov: dict | None) -> dict[str, float]:
+    """Extrapolate terms over LAYERS at fixed batch/chunk (2-3 tiny lowers)."""
+    cfg = dataclasses.replace(get_config(arch), **ov)
+    L = cfg.num_layers
+
+    if cfg.moe:
+        fd = cfg.first_dense_layers
+        f1 = _lower_terms(arch, shape_name, {**ov, "num_layers": 2, "first_dense_layers": 1}, shape_overrides=shape_ov)
+        f3 = _lower_terms(arch, shape_name, {**ov, "num_layers": 3, "first_dense_layers": 1}, shape_overrides=shape_ov)
+        m_moe = {k: f3[k] - f1[k] for k in f1}
+        if fd > 1:
+            f2 = _lower_terms(arch, shape_name, {**ov, "num_layers": 3, "first_dense_layers": 2}, shape_overrides=shape_ov)
+            m_attn = {k: f2[k] - f1[k] - m_moe[k] for k in f1}
+        else:
+            m_attn = {k: 0.0 for k in f1}
+        return {k: f1[k] + (fd - 1) * m_attn[k] + (L - fd - 1) * m_moe[k]
+                for k in f1}
+
+    # periodic families: period p derived from the structural knobs
+    if cfg.family == "vlm" and cfg.cross_attn_period:
+        p = cfg.cross_attn_period
+    elif cfg.family == "hybrid" and cfg.shared_attn_period:
+        p = cfg.shared_attn_period
+    elif cfg.family == "ssm" and cfg.slstm_period:
+        p = cfg.slstm_period
+    else:
+        p = 1
+
+    if p == 1:
+        f1 = _lower_terms(arch, shape_name, {**ov, "num_layers": 1}, shape_overrides=shape_ov)
+        f2 = _lower_terms(arch, shape_name, {**ov, "num_layers": 2}, shape_overrides=shape_ov)
+        return _affine(f1, f2, 1, 2, L)
+
+    n_periods, tail = divmod(L, p)
+    f1 = _lower_terms(arch, shape_name, {**ov, "num_layers": p}, shape_overrides=shape_ov)
+    f2 = _lower_terms(arch, shape_name, {**ov, "num_layers": 2 * p}, shape_overrides=shape_ov)
+    out = _affine(f1, f2, 1, 2, n_periods)
+    if tail:
+        # tail layers are plain (non-special) blocks: marginal from +1 layer
+        f3 = _lower_terms(arch, shape_name, {**ov, "num_layers": p + 1}, shape_overrides=shape_ov)
+        out = {k: out[k] + tail * (f3[k] - f1[k]) for k in out}
+    return out
+
+
+def extrapolated_terms(arch: str, shape_name: str,
+                       multi_pod: bool = False,
+                       overrides: dict | None = None) -> dict[str, float]:
+    """True-config per-device roofline raw terms for one cell.
+
+    Nested affine extrapolation: layers (exact marginals from unrolled tiny
+    lowers) x global batch (activation terms linear, weight terms constant)
+    x MoE dispatch chunk (dispatch einsum flops linear in chunk).
+    """
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    ov = dict(overrides or {})
+    shape = SHAPES[shape_name]
+    b_true = shape.global_batch
+
+    def at_batch(b: int) -> dict[str, float]:
+        # MoE dispatch-einsum cost is NOT affine in the chunk size (measured
+        # concave -- XLA lowers the one-hot contraction specially), so the
+        # chunk is never extrapolated: cells lower at the production
+        # moe_seq_chunk exactly (unrolled chunk bodies; the config keeps
+        # tokens/chunk small enough to compile).
+        shape_ov = None if b == b_true else {"global_batch": b}
+        return _layer_extrapolated(arch, shape_name, ov, shape_ov)
+
+    if cfg.prefer_dp:
+        # batch sharding folds over (data, model): the regime CHANGES at
+        # b = 256, so affine-in-batch across it is invalid. Per-device work
+        # is tiny under prefer_dp -- lower at the true batch directly.
+        return at_batch(b_true)
+    if b_true > 32:
+        f_a, f_b = at_batch(16), at_batch(32)
+        return _affine(f_a, f_b, 16, 32, b_true)
+    return at_batch(b_true)
+
+
+def roofline_cell(arch: str, shape_name: str, *, chips: int = 256,
+                  hw: HW = HW(), overrides: dict | None = None) -> dict[str, Any]:
+    """Full roofline record for one (arch x shape) cell on the single pod."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.models.model import build_model
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    abstract_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_params = int(sum(p.size for p in jax.tree.leaves(abstract_params)))
+    mf = model_flops(cfg, n_params, shape)
+
+    t = extrapolated_terms(arch, shape_name, overrides=overrides)
+    compute_s = t["flops"] / hw.peak_flops
+    memory_s = t["hbm_bytes"] / hw.hbm_bw
+    coll_s = t["coll_bytes"] / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    ideal_s = mf / (chips * hw.peak_flops)
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "n_params": n_params, "model_flops": mf,
+        "flops_per_dev": t["flops"], "hbm_bytes_per_dev": t["hbm_bytes"],
+        "coll_bytes_per_dev": t["coll_bytes"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "bottleneck": bottleneck,
+        "useful_ratio": mf / (t["flops"] * chips) if t["flops"] else 0.0,
+        "roofline_fraction": ideal_s / step_s if step_s else 0.0,
+    }
+
+
+def main():
+    import argparse
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+    from repro.configs import list_archs, supported_shapes
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="benchmarks/artifacts/roofline")
+    args = ap.parse_args()
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        support = supported_shapes(get_config(arch))
+        shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+        for shape_name in shapes:
+            if support[shape_name] != "ok":
+                continue
+            try:
+                rec = roofline_cell(arch, shape_name)
+                rec["status"] = "ok"
+            except Exception as e:                     # noqa: BLE001
+                import traceback
+                rec = {"arch": arch, "shape": shape_name, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-1500:]}
+            with open(os.path.join(args.out, f"{arch}__{shape_name}.json"), "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["status"] == "ok":
+                print(f"{arch:22s} {shape_name:12s} bottleneck={rec['bottleneck']:10s} "
+                      f"compute={rec['compute_s']:.3f}s memory={rec['memory_s']:.3f}s "
+                      f"coll={rec['collective_s']:.3f}s roofline={rec['roofline_fraction']:.2%} "
+                      f"useful={rec['useful_ratio']:.2%}")
+            else:
+                print(f"{arch:22s} {shape_name:12s} ERROR {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

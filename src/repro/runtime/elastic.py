@@ -1,0 +1,40 @@
+"""Elastic scaling: restore a checkpoint taken on mesh A onto mesh B.
+
+Checkpoints store unsharded logical arrays (checkpoint.py), so elasticity is
+"re-derive shardings on the new mesh, device_put". This is the single-
+controller analogue of Pathways-style re-meshing: a pod drops out -> rebuild
+the mesh from the surviving devices -> restore -> continue (data order stays
+deterministic because batches are pure functions of step).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import latest_step, restore
+from repro.runtime import sharding as shd
+
+
+def remesh_restore(ckpt_dir: str, abstract_state, cfg, new_mesh: Mesh,
+                   *, multi_pod: bool) -> tuple[int, Any]:
+    """Restore the newest checkpoint resharded for `new_mesh`."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    shardings = state_shardings(abstract_state, cfg, new_mesh, multi_pod=multi_pod)
+    return step, restore(ckpt_dir, step, abstract_state, shardings)
+
+
+def state_shardings(abstract_state, cfg, mesh: Mesh, *, multi_pod: bool):
+    """Shardings for a TrainState pytree (params + opt + ef + step)."""
+    from repro.runtime.train_lib import TrainState
+    params_sh = shd.param_shardings(abstract_state.params, cfg, mesh,
+                                    multi_pod=multi_pod)
+    opt_sh = shd.opt_shardings(abstract_state.opt, cfg, mesh,
+                               multi_pod=multi_pod)
+    ef_sh = (shd.param_shardings(abstract_state.ef, cfg, mesh,
+                                 multi_pod=multi_pod)
+             if abstract_state.ef is not None else None)
+    return TrainState(shd.scalar_sharding(mesh), params_sh, opt_sh, ef_sh)

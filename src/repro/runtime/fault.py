@@ -1,0 +1,116 @@
+"""Failure handling around the train loop: restart-from-latest, straggler
+detection, failure injection for tests.
+
+At 1000+ nodes the governing assumptions are (a) *some* host is always about
+to fail, (b) the data pipeline must replay deterministically, (c) slow chips
+must be visible before they become the step time. Correspondingly:
+
+  * run_training(): steps wrapped in try/except; on a (real or injected)
+    fault the loop restores the newest complete checkpoint and replays --
+    data batches are pure functions of step (repro.data.tokens), so the
+    replay is bit-identical.
+  * StragglerMonitor: rolling-median step timer; a step slower than
+    `threshold x median` is logged with its step index (the single-process
+    analogue of per-host heartbeat deadlines; on a real cluster the same
+    record triggers hot-spare swap-in).
+  * FaultInjector: deterministic fault schedule for tests/CI.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from collections import deque
+from typing import Any, Callable, Iterable
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.fault")
+
+
+class InjectedFault(RuntimeError):
+    pass
+
+
+class FaultInjector:
+    def __init__(self, fail_at_steps: Iterable[int] = ()):
+        self.fail_at = set(fail_at_steps)
+        self.fired: set[int] = set()
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise InjectedFault(f"injected fault at step {step}")
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 3.0, window: int = 32):
+        self.threshold = threshold
+        self.times: deque[float] = deque(maxlen=window)
+        self.flagged: list[tuple[int, float, float]] = []
+
+    def record(self, step: int, dt: float):
+        if len(self.times) >= 8:
+            srt = sorted(self.times)
+            median = srt[len(srt) // 2]
+            if dt > self.threshold * median:
+                self.flagged.append((step, dt, median))
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, dt, median)
+        self.times.append(dt)
+
+
+def run_training(
+    *,
+    train_step: Callable,
+    init_state: Callable[[], Any],
+    batch_fn: Callable[[int], dict],
+    num_steps: int,
+    ckpt: CheckpointManager,
+    mesh_shape=None,
+    injector: FaultInjector | None = None,
+    straggler: StragglerMonitor | None = None,
+    max_restarts: int = 10,
+    on_metrics: Callable[[int, dict], None] | None = None,
+) -> Any:
+    """Crash-safe training driver. Returns the final state."""
+    restarts = 0
+    state = None
+    while True:
+        try:
+            if state is None:
+                fresh = init_state()
+                step0, restored = ckpt.restore_latest(
+                    jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                                 fresh))
+                if restored is not None:
+                    log.info("restored checkpoint at step %d", step0)
+                    state = restored
+                    start = step0
+                else:
+                    state = fresh
+                    start = 0
+            else:
+                start = int(jax.device_get(state.step))
+
+            for step in range(start, num_steps):
+                t0 = time.perf_counter()
+                if injector is not None:
+                    injector.check(step)
+                state, metrics = train_step(state, batch_fn(step))
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if straggler is not None:
+                    straggler.record(step, dt)
+                if on_metrics is not None:
+                    on_metrics(step, metrics)
+                ckpt.maybe_save(step + 1, state, mesh_shape=mesh_shape)
+            ckpt.wait()
+            return state
+        except InjectedFault as e:
+            restarts += 1
+            log.warning("fault: %s (restart %d/%d)", e, restarts, max_restarts)
+            if restarts > max_restarts:
+                raise
+            state = None                   # force restore-from-latest

@@ -1,0 +1,47 @@
+"""Serving-step factories: prefill and single-token decode over sharded
+caches. `make_serve_step` is what the decode_* / long_* dry-run cells lower
+(one new token against a seq_len-deep cache), per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch: dict, caches):
+        return model.prefill(params, batch, caches)
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, tokens, caches, cache_len, image_embeds=None):
+        return model.decode_step(params, tokens, caches, cache_len,
+                                 image_embeds=image_embeds)
+    return decode_step
+
+
+def make_serve_step(model, *, seq_len: int) -> Callable:
+    """decode-shape cell: one token in, KV/state cache of depth seq_len."""
+    def serve_step(params, tokens, caches):
+        cache_len = jnp.full((tokens.shape[0],), seq_len - 1, jnp.int32)
+        logits, new_caches, _ = model.decode_step(params, tokens, caches, cache_len)
+        return logits, new_caches
+    return serve_step
+
+
+def greedy_generate(model, params, prompt: jax.Array, *, steps: int,
+                    s_max: int) -> jax.Array:
+    """CPU-scale greedy decoding loop (examples/serve_lm.py)."""
+    b = prompt.shape[0]
+    caches = model.init_cache(b, s_max)
+    logits, caches, cache_len = model.prefill(params, {"tokens": prompt}, caches)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    for _ in range(steps - 1):
+        logits, caches, cache_len = model.decode_step(params, tok, caches, cache_len)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,235 @@
+"""Logical-axis sharding rules -> NamedSharding for params, optimizer state,
+caches and batches.
+
+Strategy (DESIGN.md §6): batch over ("pod","data") [DP], parameters
+FSDP-sharded over "data" (optionally "pod" for the 340B+ configs) on their
+"embed"-like dim and tensor-parallel over "model" on their heads/mlp/vocab/
+expert dim. MoE expert stacks shard their expert axis over "model" (EP).
+
+Logical axes are derived from parameter *path names* (we own every init
+function, so key names are a stable contract -- asserted by tests) and
+resolved to mesh axes with a divisibility fallback: a dim that does not
+divide by its mesh-axis product drops trailing axes until it does, and a
+mesh axis is never used twice in one spec. This is what lets one rule-set
+cover all 10 architectures x 2 meshes with no per-arch tables.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical-name -> candidate mesh-axis tuples, tried in order (first divisible
+# prefix wins; empty tuple = replicate).
+def logical_rules(cfg, multi_pod: bool) -> dict[str, tuple[str, ...]]:
+    if multi_pod:
+        fsdp = (("pod", "data") if cfg.fsdp_pod else ("data",)) if cfg.fsdp else ()
+        batch = ("pod", "data")
+    else:
+        fsdp = ("data",) if cfg.fsdp else ()
+        batch = ("data",)
+    vocab = ("model",) if cfg.emb_vocab_sharded else ()
+    if cfg.prefer_dp:
+        # Archs whose head counts don't divide the model axis (xlstm H=4)
+        # thrash GSPMD with gather/replicate cycles under TP. Fold the
+        # 'model' axis into DP+FSDP instead: batch AND params shard over
+        # (data, model); no tensor parallelism.
+        batch = batch + ("model",)
+        fsdp = (fsdp + ("model",)) if cfg.fsdp else ()
+        return {"embed": fsdp, "tp": (), "expert": (), "vocab": (),
+                "batch": batch, "seq": (), "layers": (), None: ()}
+    return {
+        "embed": fsdp,          # FSDP dim
+        "tp": ("model",),       # tensor-parallel dim (heads/mlp/vocab)
+        "expert": ("model",),   # expert-parallel dim
+        "vocab": vocab,         # embedding-table row dim (see base.py note)
+        "batch": batch,
+        "seq": (),              # sequence stays unsharded (no SP by default)
+        "layers": (),           # stacked-scan leading axis
+        None: (),
+    }
+
+
+# --------------------------------------------------------- logical specs ----
+_TP_OUT = ("wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b", "up_proj",
+           "in_proj", "w_in", "w_if", "wi", "wg", "head", "frame_proj",
+           "img_proj")
+_TP_IN = ("wo", "down_proj", "out_proj", "w_out")
+
+
+def _param_logical(path: tuple[str, ...], ndim: int) -> tuple[str | None, ...]:
+    """Logical axes for one parameter leaf, from its tree path."""
+    names = [p for p in path if not p.isdigit()]
+    if not names:                        # e.g. optimizer "count" scalar
+        return tuple(None for _ in range(ndim))
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    inside_layers = "segments" in names
+    base: tuple[str | None, ...]
+
+    def owner(k):   # nearest named ancestor for w/b leaves
+        return parent if leaf in ("w", "b") else leaf
+
+    key = owner(leaf)
+    if key == "emb":
+        base = ("vocab", "embed")
+    elif key == "router":
+        base = ("embed", None)
+    elif key in ("wi", "wg") and ndim - (2 if not inside_layers else 3) >= 1:
+        # stacked MoE expert weights (E, D, F) (+ optional layers axis)
+        base = ("expert", "embed", None)
+    elif key == "wo" and ndim - (2 if not inside_layers else 3) >= 1:
+        base = ("expert", None, "embed")
+    elif key in _TP_OUT:
+        base = ("embed", "tp") if leaf != "b" else ("tp",)
+    elif key in _TP_IN:
+        base = ("tp", "embed") if leaf != "b" else (None,)
+    elif key == "conv_w":
+        base = (None, "tp")
+    elif key in ("a_log", "dt_bias", "d_skip"):
+        base = ("tp",)
+    elif key == "r_rec":
+        base = ("tp", None, None)
+    else:
+        base = tuple(None for _ in range(ndim))
+
+    # pad/trim to ndim, accounting for the stacked "layers" leading axis.
+    if inside_layers:
+        base = ("layers", *base)
+    if len(base) < ndim:
+        base = base + tuple(None for _ in range(ndim - len(base)))
+    return base[:ndim]
+
+
+_CACHE_LOGICAL = {
+    "k": ("batch", "seq", "tp", None),
+    "v": ("batch", "seq", "tp", None),
+    "k_img": ("batch", "seq", "tp", None),
+    "v_img": ("batch", "seq", "tp", None),
+    "c_kv": ("batch", "seq", None),
+    "k_rope": ("batch", "seq", None, None),
+    "ssm": ("batch", "tp", None, None),
+    "conv": ("batch", None, "tp"),
+    "c": ("batch", "tp", None, None),
+    "n": ("batch", "tp", None),
+    "m": ("batch", "tp"),
+    "h": ("batch", "tp", None),
+}
+
+
+def _cache_logical(path: tuple[str, ...], ndim: int) -> tuple[str | None, ...]:
+    leaf = path[-1] if path else ""
+    base = _CACHE_LOGICAL.get(leaf, tuple(None for _ in range(ndim - 1)))
+    base = ("layers", *base)                     # stacked per-segment axis
+    if len(base) < ndim:
+        base = base + tuple(None for _ in range(ndim - len(base)))
+    return base[:ndim]
+
+
+# ------------------------------------------------------------- resolver -----
+def _resolve(logical: tuple[str | None, ...], shape: tuple[int, ...],
+             rules: dict, mesh: Mesh) -> P:
+    used: set[str] = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        axes = rules.get(name, ())
+        pick: list[str] = []
+        prod = 1
+        for ax in axes:
+            if ax in used:
+                break
+            if dim % (prod * mesh.shape[ax]) == 0:
+                pick.append(ax)
+                prod *= mesh.shape[ax]
+            else:
+                break
+        used.update(pick)
+        out.append(tuple(pick) if len(pick) > 1 else (pick[0] if pick else None))
+    return P(*out)
+
+
+def _tree_shardings(tree, mesh: Mesh, rules: dict, logical_fn):
+    def one(path, leaf):
+        names = tuple(_path_name(p) for p in path)
+        spec = _resolve(logical_fn(names, len(leaf.shape)), leaf.shape, rules, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _path_name(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    return str(entry)
+
+
+# ----------------------------------------------------------- public API -----
+def param_shardings(abstract_params, cfg, mesh: Mesh, *, multi_pod: bool):
+    rules = logical_rules(cfg, multi_pod)
+    return _tree_shardings(abstract_params, mesh, rules, _param_logical)
+
+
+def opt_shardings(abstract_opt, cfg, mesh: Mesh, *, multi_pod: bool):
+    """Optimizer state mirrors param paths (m/v/vr/vc subtrees keep the
+    param's path suffix), so the same logical derivation applies; factored
+    adafactor stats have reduced ndim and the divisibility fallback handles
+    the dropped dims."""
+    rules = logical_rules(cfg, multi_pod)
+
+    def logical_fn(names, ndim):
+        # strip the optimizer-state wrapper keys from the path
+        names = tuple(n for n in names if n not in ("m", "v", "vr", "vc", "mu",
+                                                    "nu", "count", "ef"))
+        full = _param_logical(names, ndim)
+        return full
+    return _tree_shardings(abstract_opt, mesh, rules, logical_fn)
+
+
+def cache_shardings(abstract_caches, cfg, mesh: Mesh, *, multi_pod: bool):
+    rules = logical_rules(cfg, multi_pod)
+    return _tree_shardings(abstract_caches, mesh, rules, _cache_logical)
+
+
+def batch_shardings(abstract_batch, cfg, mesh: Mesh, *, multi_pod: bool):
+    rules = logical_rules(cfg, multi_pod)
+
+    def logical_fn(names, ndim):
+        return ("batch",) + tuple(None for _ in range(ndim - 1))
+    return _tree_shardings(abstract_batch, mesh, rules, logical_fn)
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ------------------------------------------------ activation shard hints ----
+# GSPMD's propagation loses the batch sharding through scan+remat bodies, so
+# model code plants logical constraints via shard_hint(); they are no-ops
+# unless a mesh context is active (smoke tests see 1 device and skip them).
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar("act_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(mesh: Mesh, cfg, *, multi_pod: bool):
+    token = _ACT_CTX.set((mesh, logical_rules(cfg, multi_pod)))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(token)
+
+
+def shard_hint(x, *logical: str | None):
+    """Constrain activation x to logical axes (with divisibility fallback)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or not hasattr(x, "shape") or len(logical) != x.ndim:
+        return x
+    mesh, rules = ctx
+    spec = _resolve(logical, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,87 @@
+"""Train-step factory: loss + grad with microbatch accumulation, optional
+int8 error-feedback gradient compression, optimizer update -- one jit'able
+pure function over a TrainState pytree.
+
+The same function is lowered (a) concretely for CPU-scale examples and (b)
+abstractly against the production mesh in launch/dryrun.py; there is no
+separate "dry-run model".
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import get_optimizer
+from repro.optim.grad_compress import compress_grads, init_error_feedback
+from repro.optim.schedules import cosine_schedule
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: Any
+    ef: Any | None            # error-feedback residual (grad_compress only)
+
+
+def make_train_state(model, rng) -> TrainState:
+    params = model.init(rng)
+    opt = get_optimizer(model.cfg.optimizer).init(params)
+    ef = init_error_feedback(params) if model.cfg.grad_compress else None
+    return TrainState(jnp.zeros((), jnp.int32), params, opt, ef)
+
+
+def abstract_train_state(model, rng) -> TrainState:
+    """Shape-only TrainState (no allocation) for dry-run lowering."""
+    return jax.eval_shape(lambda r: make_train_state(model, r), rng)
+
+
+def make_train_step(model, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000) -> Callable:
+    cfg = model.cfg
+    optimizer = get_optimizer(cfg.optimizer)
+    lr_fn = cosine_schedule(peak_lr, warmup, total_steps)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if cfg.microbatches > 1:
+            # Grad accumulation: scan over microbatches (batch dim split).
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(state.params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), metrics
+
+            def split(x):
+                k = cfg.microbatches
+                return x.reshape(k, x.shape[0] // k, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, grads)
+            loss = loss_sum / cfg.microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+
+        new_ef = state.ef
+        if cfg.grad_compress:
+            grads, new_ef = compress_grads(grads, state.ef)
+
+        lr = lr_fn(state.step)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params, lr)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        out_metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm, **metrics}
+        return TrainState(state.step + 1, new_params, new_opt, new_ef), out_metrics
+
+    return train_step

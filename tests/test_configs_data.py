@@ -1,0 +1,104 @@
+"""Assigned-architecture configs match the assignment table exactly;
+deterministic data pipeline invariants."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, supported_shapes
+from repro.data.images import add_salt_pepper, fingerprint, psnr
+from repro.data.tokens import lm_batch
+
+# (arch, L, d_model, H, kv, d_ff, vocab) from the assignment table
+TABLE = [
+    ("zamba2-1.2b", 38, 2048, 32, 32, 8192, 32000),
+    ("hubert-xlarge", 48, 1280, 16, 16, 5120, 504),
+    ("qwen2.5-3b", 36, 2048, 16, 2, 11008, 151936),
+    ("nemotron-4-340b", 96, 18432, 96, 8, 73728, 256000),
+    ("granite-3-2b", 40, 2048, 32, 8, 8192, 49155),
+    ("qwen2-0.5b", 24, 896, 14, 2, 4864, 151936),
+    ("deepseek-v3-671b", 61, 7168, 128, 128, 2048, 129280),
+    ("kimi-k2-1t-a32b", 61, 7168, 64, 8, 2048, 163840),
+    ("llama-3.2-vision-90b", 100, 8192, 64, 8, 28672, 128256),
+    ("xlstm-1.3b", 48, 2048, 4, 4, 0, 50304),
+]
+
+
+@pytest.mark.parametrize("arch,L,d,h,kv,ff,v", TABLE)
+def test_config_matches_assignment(arch, L, d, h, kv, ff, v):
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.vocab_size == v
+    if cfg.moe:
+        assert cfg.moe_d_ff == ff                   # assignment lists expert d_ff
+    else:
+        assert cfg.d_ff == ff
+
+
+def test_moe_table_values():
+    ds = get_config("deepseek-v3-671b")
+    assert (ds.num_experts, ds.top_k, ds.num_shared_experts) == (256, 8, 1)
+    assert ds.attention == "mla" and ds.kv_lora_rank == 512
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert (kimi.num_experts, kimi.top_k) == (384, 8)
+
+
+def test_zamba2_ssm_state():
+    assert get_config("zamba2-1.2b").ssm_state == 64
+
+
+def test_full_param_counts_in_expected_range():
+    """Sanity: abstract param counts near the named scales."""
+    import jax
+
+    from repro.models.model import build_model
+    expect = {"qwen2-0.5b": (0.4e9, 0.7e9), "qwen2.5-3b": (2.5e9, 4e9),
+              "granite-3-2b": (2e9, 3.5e9), "xlstm-1.3b": (1.0e9, 2.2e9),
+              "zamba2-1.2b": (1.0e9, 1.9e9), "hubert-xlarge": (0.9e9, 1.3e9),
+              "nemotron-4-340b": (320e9, 360e9),
+              "deepseek-v3-671b": (640e9, 700e9),
+              "kimi-k2-1t-a32b": (0.95e12, 1.15e12),
+              "llama-3.2-vision-90b": (80e9, 100e9)}
+    for arch, (lo, hi) in expect.items():
+        model = build_model(get_config(arch))
+        abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        n = sum(p.size for p in jax.tree.leaves(abstract))
+        assert lo <= n <= hi, f"{arch}: {n:,}"
+
+
+def test_shape_cells():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_only_for_subquadratic():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        ok = supported_shapes(cfg)["long_500k"] == "ok"
+        assert ok == (cfg.family in ("hybrid", "ssm")), arch
+
+
+def test_lm_batch_deterministic_and_shard_distinct():
+    cfg = get_config("qwen2-0.5b")
+    a = lm_batch(cfg, batch=4, seq=32, step=3, shard=0)
+    b = lm_batch(cfg, batch=4, seq=32, step=3, shard=0)
+    c = lm_batch(cfg, batch=4, seq=32, step=3, shard=1)
+    d = lm_batch(cfg, batch=4, seq=32, step=4, shard=0)
+    assert (a["tokens"] == b["tokens"]).all()        # same (step, shard) -> same
+    assert not (a["tokens"] == c["tokens"]).all()    # different shard
+    assert not (a["tokens"] == d["tokens"]).all()    # different step
+    assert (a["labels"][:, :-1] == a["tokens"][:, 1:]).all()  # next-token
+
+
+def test_fingerprint_generator_and_noise():
+    img = fingerprint((128, 128), seed=1)
+    assert img.shape == (128, 128) and img.dtype == np.uint8
+    assert img.std() > 30                            # ridge contrast exists
+    noisy = add_salt_pepper(img, 20, seed=1)
+    frac = ((noisy == 0) | (noisy == 255)).mean()
+    assert 0.1 < frac < 0.35                         # ~20% + natural extremes
+    assert psnr(img, img) > 80
+    assert psnr(img, noisy) < 20

@@ -1,0 +1,115 @@
+"""Pallas kernel sweeps: shapes/dtypes vs the ref.py pure-jnp oracles.
+
+Kernels run in interpret mode (CPU container; TPU is the target). Integer
+outputs must match the oracle EXACTLY (the kernels are pure-integer like the
+paper's RTL); float rescales use allclose.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.gaussian_conv import gaussian_conv3x3_kernel, gaussian_kernel_3x3
+from repro.kernels.karatsuba_matmul import karatsuba_matmul_kernel
+from repro.kernels.mitchell_matmul import mitchell_matmul_kernel
+from repro.kernels.ops import gaussian_filter, limb_matmul, lns_matmul
+
+RNG = np.random.default_rng(42)
+
+
+class TestMitchellMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", [(16, 128, 128), (32, 256, 128), (48, 384, 256)])
+    @pytest.mark.parametrize("num_ecc,case_split", [(0, True), (1, False), (3, False)])
+    def test_bit_exact_vs_oracle(self, m, k, n, num_ecc, case_split):
+        a = jnp.asarray(RNG.integers(-255, 256, (m, k)), jnp.int32)
+        b = jnp.asarray(RNG.integers(-255, 256, (k, n)), jnp.int32)
+        got = mitchell_matmul_kernel(a, b, num_ecc=num_ecc, case_split=case_split,
+                                     block_m=16, block_n=128, block_k=128)
+        want = ref.mitchell_matmul_ref(a, b, num_ecc=num_ecc, case_split=case_split)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("nbits", [4, 6, 8])
+    def test_lns_matmul_error_bound(self, nbits):
+        a = jnp.asarray(RNG.normal(size=(32, 128)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(128, 128)), jnp.float32)
+        y = lns_matmul(a, b, nbits=nbits)
+        exact = a @ b
+        rel = float(jnp.abs(y - exact).max() / jnp.abs(exact).max())
+        assert rel < 0.2 + 0.8 / (1 << nbits)        # coarse: improves w/ bits
+
+    def test_ecc_chain_reduces_matmul_error(self):
+        a = jnp.asarray(RNG.normal(size=(32, 128)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(128, 128)), jnp.float32)
+        exact = a @ b
+        errs = []
+        for k in (0, 1, 2, 3):
+            y = lns_matmul(a, b, num_ecc=k, case_split=False)
+            errs.append(float(jnp.abs(y - exact).mean()))
+        assert errs == sorted(errs, reverse=True)    # monotone improvement
+
+
+class TestKaratsubaMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128)])
+    @pytest.mark.parametrize("karatsuba", [True, False])
+    def test_partials_bit_exact(self, m, k, n, karatsuba):
+        lim = 63 if karatsuba else 127
+        ah = jnp.asarray(RNG.integers(-lim, lim + 1, (m, k)), jnp.int32)
+        al = jnp.asarray(RNG.integers(-lim, lim + 1, (m, k)), jnp.int32)
+        bh = jnp.asarray(RNG.integers(-lim, lim + 1, (k, n)), jnp.int32)
+        bl = jnp.asarray(RNG.integers(-lim, lim + 1, (k, n)), jnp.int32)
+        got = karatsuba_matmul_kernel(ah, al, bh, bl, karatsuba=karatsuba)
+        want = ref.karatsuba_matmul_ref(ah, al, bh, bl, karatsuba=karatsuba)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    @pytest.mark.parametrize("karatsuba", [True, False])
+    def test_float_wrapper_precision(self, karatsuba):
+        """3-pass exact-int16-class matmul ~1e-4 relative (vs int8's ~1e-2)."""
+        a = jnp.asarray(RNG.normal(size=(100, 200)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(200, 150)), jnp.float32)
+        y = limb_matmul(a, b, karatsuba=karatsuba)
+        exact = a @ b
+        rel = float(jnp.abs(y - exact).max() / jnp.abs(exact).max())
+        assert rel < 2e-3
+
+    def test_karatsuba_equals_schoolbook_product(self):
+        """kom3 == kom4 reconstruction (paper eq. 18 identity, MXU form)."""
+        a = jnp.asarray(RNG.normal(size=(64, 128)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(128, 64)), jnp.float32)
+        y3 = limb_matmul(a, b, karatsuba=True)
+        y4 = limb_matmul(a, b, karatsuba=False)
+        exact = a @ b
+        assert float(jnp.abs(y3 - exact).max()) < 5e-3 * float(jnp.abs(exact).max())
+        assert float(jnp.abs(y4 - exact).max()) < 5e-3 * float(jnp.abs(exact).max())
+
+
+class TestGaussianConvKernel:
+    @pytest.mark.parametrize("hw", [(32, 32), (64, 48), (128, 96)])
+    @pytest.mark.parametrize("method", ["exact", "refmlm", "mitchell",
+                                        "mitchell_ecc2", "odma", "refmlm_nc"])
+    def test_bit_exact_vs_oracle(self, hw, method):
+        img = jnp.asarray(RNG.integers(0, 256, hw), jnp.int32)
+        k = jnp.asarray(gaussian_kernel_3x3())
+        got = gaussian_conv3x3_kernel(img, k, method=method, block_rows=16)
+        want = ref.gaussian_conv3x3_ref(img, k, method=method)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_refmlm_filter_identical_to_exact(self):
+        """The paper's claim: REFMLM is error-free => identical filter output."""
+        img = jnp.asarray(RNG.integers(0, 256, (64, 64)), jnp.int32)
+        k = jnp.asarray(gaussian_kernel_3x3())
+        exact = gaussian_filter(img, k, method="exact")
+        prop = gaussian_filter(img, k, method="refmlm")
+        np.testing.assert_array_equal(np.asarray(exact), np.asarray(prop))
+
+    def test_kernel_window_matches_paper_fig9(self):
+        k = gaussian_kernel_3x3(sigma=1.0, scale=256)
+        assert k.shape == (3, 3) and k[1, 1] == k.max()
+        assert abs(int(k.sum()) - 256) <= 4          # scale-256 normalization
+
+    def test_nonmultiple_rows_padding(self):
+        img = jnp.asarray(RNG.integers(0, 256, (50, 40)), jnp.int32)
+        k = jnp.asarray(gaussian_kernel_3x3())
+        got = gaussian_filter(img, k, method="exact", block_rows=32)
+        want = ref.gaussian_conv3x3_ref(img, k, method="exact")
+        np.testing.assert_array_equal(np.asarray(got, np.int32), np.asarray(want))

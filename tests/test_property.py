@@ -1,0 +1,86 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mitchell import babic_ecc, mitchell
+from repro.core.quant import limbs_to_int, quantize_limbs, quantize_magnitude
+from repro.core.refmlm import refmlm
+
+u16 = st.integers(min_value=0, max_value=(1 << 16) - 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(u16, min_size=1, max_size=32), st.lists(u16, min_size=1, max_size=32))
+def test_refmlm_exact_16bit(xs, ys):
+    n = min(len(xs), len(ys))
+    a = jnp.asarray(xs[:n], jnp.int32)
+    b = jnp.asarray(ys[:n], jnp.int32)
+    true = a.astype(jnp.uint32) * b.astype(jnp.uint32)
+    assert bool((refmlm(a, b, 16, variant="kom4").astype(jnp.uint32) == true).all())
+    assert bool((refmlm(a, b, 16, variant="kom3").astype(jnp.uint32) == true).all())
+
+
+@settings(max_examples=100, deadline=None)
+@given(u16, u16)
+def test_mitchell_error_sign_and_bound(x, y):
+    a = jnp.asarray([x], jnp.int32)
+    b = jnp.asarray([y], jnp.int32)
+    p = int(mitchell(a, b, 16).astype(jnp.uint32)[0])
+    true = x * y
+    assert p <= true                                 # error always >= 0
+    if true:
+        assert (true - p) / true <= 1 / 9 + 1e-9     # MER bound
+
+
+@settings(max_examples=50, deadline=None)
+@given(u16, u16, st.integers(min_value=0, max_value=4))
+def test_babic_ecc_residual_shrinks(x, y, k):
+    a = jnp.asarray([x], jnp.int32)
+    b = jnp.asarray([y], jnp.int32)
+    true = x * y
+    e_k = abs(true - int(babic_ecc(a, b, 16, num_ecc=k).astype(jnp.uint32)[0]))
+    e_k1 = abs(true - int(babic_ecc(a, b, 16, num_ecc=k + 1).astype(jnp.uint32)[0]))
+    assert e_k1 <= e_k
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3,
+                          allow_nan=False, allow_infinity=False),
+                min_size=4, max_size=64),
+       st.booleans())
+def test_limb_decomposition_roundtrip(vals, karatsuba):
+    x = jnp.asarray(vals, jnp.float32)
+    d, scale = quantize_limbs(x, karatsuba=karatsuba)
+    w = d.limb_bits
+    lim = 63 if karatsuba else 127
+    assert int(jnp.abs(d.hi).max()) <= lim + 1       # lo balanced => hi in range
+    assert int(jnp.abs(d.lo).max()) <= (1 << (w - 1))
+    recon = limbs_to_int(d).astype(jnp.float32) * scale
+    tol = float(scale) * 0.5 + 1e-6
+    assert float(jnp.abs(recon - x).max()) <= tol    # quantization step bound
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(min_value=-100, max_value=100,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=64),
+       st.integers(min_value=4, max_value=10))
+def test_quantize_magnitude_bound(vals, nbits):
+    x = jnp.asarray(vals, jnp.float32)
+    q = quantize_magnitude(x, nbits)
+    deq = q.magnitude.astype(jnp.float32) * q.sign.astype(jnp.float32) * q.scale
+    assert float(jnp.abs(deq - x).max()) <= float(q.scale) * 0.5 + 1e-6
+
+
+def test_segment_kinds_reconstruction():
+    """segment_kinds must tile back to the original kind sequence."""
+    from repro.configs import get_config, list_archs
+    from repro.models.transformer import segment_kinds
+    for arch in list_archs():
+        cfg = get_config(arch)
+        kinds = cfg.block_kinds()
+        segs = segment_kinds(kinds)
+        rebuilt = [k for pat, reps in segs for _ in range(reps) for k in pat]
+        assert rebuilt == kinds, arch
+        assert len(segs) <= 4, (arch, segs)          # compile-time bound
