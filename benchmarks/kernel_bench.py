@@ -2,13 +2,16 @@
 only -- the TPU roofline terms for these kernels come from the dry-run).
 
 Reports us/call + achieved element-throughput for the three kernels across
-block-size variants (the BlockSpec tuning axis of §Perf)."""
+block-size variants (the BlockSpec tuning axis of §Perf), plus the batched
+filter-bank pipeline across filters x batch sizes and the separable-vs-
+direct dataflow trade (DESIGN.md §5)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.filters import apply_filter
 from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3, limb_matmul, lns_matmul
 
 
@@ -36,6 +39,23 @@ def main():
         us = time_fn(lambda i, k: gaussian_filter(i, k, method=meth), img, kern,
                      iters=3)
         emit(f"kernel_gauss_{meth}", us, f"mpix_s={256*256/us:.2f}")
+
+    # filter-bank pipeline: filters x batch sizes (one compiled kernel per
+    # config; the batch rides the leading grid axis).
+    for filt in ("gaussian3", "gaussian5", "sobel_x"):
+        for batch in (1, 4, 8):
+            b = jnp.asarray(rng.integers(0, 256, (batch, 128, 128)), jnp.int32)
+            us = time_fn(lambda x: apply_filter(x, filt, method="refmlm"), b,
+                         iters=3)
+            emit(f"kernel_bank_{filt}_n{batch}", us,
+                 f"mpix_s={batch*128*128/us:.2f}")
+    # separable (k+k taps) vs direct (k*k taps) on the 5x5 Gaussian.
+    b = jnp.asarray(rng.integers(0, 256, (4, 128, 128)), jnp.int32)
+    for sep in (True, False):
+        us = time_fn(lambda x: apply_filter(x, "gaussian5", method="refmlm",
+                                            separable=sep), b, iters=3)
+        emit(f"kernel_bank_gaussian5_{'sep' if sep else 'direct'}", us,
+             f"mpix_s={4*128*128/us:.2f}")
 
 
 if __name__ == "__main__":

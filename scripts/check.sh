@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Repo check: tier-1 test suite + documentation-link lint.
+#
+#   scripts/check.sh            run everything
+#   scripts/check.sh --lint     doc-link lint only (fast)
+#
+# The doc lint asserts that every `DESIGN.md §N` reference in src/ and
+# benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
+# design citations can never dangle again.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+lint() {
+  python - <<'EOF'
+import pathlib, re, sys
+
+root = pathlib.Path(".")
+design = root / "DESIGN.md"
+if not design.exists():
+    sys.exit("FAIL: DESIGN.md is missing but src/ cites it")
+sections = set(re.findall(r"^##\s+§(\d+)", design.read_text(), re.M))
+
+bad = []
+refs = 0
+for base in ("src", "benchmarks"):
+    for path in sorted(root.glob(f"{base}/**/*.py")):
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            for sec in re.findall(r"DESIGN\.md\s+§(\d+)", line):
+                refs += 1
+                if sec not in sections:
+                    bad.append(f"{path}:{i}: DESIGN.md §{sec} (have: "
+                               f"{sorted(sections, key=int)})")
+if bad:
+    sys.exit("FAIL: dangling DESIGN.md section references:\n" + "\n".join(bad))
+print(f"doc-link lint OK: {refs} DESIGN.md §-references resolve "
+      f"({len(sections)} sections)")
+EOF
+}
+
+lint
+if [[ "${1:-}" == "--lint" ]]; then
+  exit 0
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

@@ -12,12 +12,16 @@ import dataclasses
 @dataclasses.dataclass(frozen=True)
 class FilterConfig:
     image_hw: tuple[int, int] = (256, 256)
+    batch: int = 4                   # images per pipeline invocation (N axis)
     sigma: float = 1.0
     kernel_scale: int = 256          # paper Fig. 9
     nbits: int = 8                   # pixel width; the paper's 8x8 REFMLM
     multiplier: str = "refmlm"       # exact|refmlm|refmlm_nc|mitchell|mitchell_ecc{k}|odma
+    #: filter-bank members swept by the benchmarks (repro.filters, DESIGN.md §5)
+    filters: tuple[str, ...] = ("gaussian3", "gaussian5", "box3", "sharpen3",
+                                "sobel_x", "sobel_y", "laplacian")
     noise_levels: tuple[int, ...] = (10, 20, 30, 40)   # % salt&pepper, Table 10
-    block_rows: int = 32             # Pallas conv row-band tile
+    block_rows: int | None = None    # Pallas row-band tile; None = auto from H
 
 
 CONFIG = FilterConfig()

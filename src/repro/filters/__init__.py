@@ -1,0 +1,31 @@
+"""Batched multi-filter image pipeline on the REFMLM datapath (DESIGN.md §5).
+
+Layers:
+  bank.py     -- the filter definitions (integer taps, fixed-point epilogue,
+                 separable decompositions);
+  conv.py     -- the batched multiplier-selectable Pallas convolution pass;
+  pipeline.py -- user-facing apply_filter / filter_bank_apply;
+  ref.py      -- independently-written pure-jnp oracles for tests.
+"""
+from repro.filters.bank import (
+    FILTER_BANK,
+    FILTER_NAMES,
+    FilterSpec,
+    gaussian_kernel_1d,
+    get_filter,
+)
+from repro.filters.conv import choose_block_rows, conv2d_pass, tap_multiplier
+from repro.filters.pipeline import apply_filter, filter_bank_apply
+
+__all__ = [
+    "FILTER_BANK",
+    "FILTER_NAMES",
+    "FilterSpec",
+    "apply_filter",
+    "choose_block_rows",
+    "conv2d_pass",
+    "filter_bank_apply",
+    "gaussian_kernel_1d",
+    "get_filter",
+    "tap_multiplier",
+]

@@ -1,0 +1,187 @@
+"""Batched multiplier-selectable 2-D convolution Pallas kernel (DESIGN.md §5).
+
+Generalization of the original single-image 3x3 Gaussian kernel: one kernel
+body serves every filter of the bank, in either dataflow --
+
+  * direct    -- one pass over the (kh, kw) tap table;
+  * separable -- a horizontal (1, kw) pass producing a raw int32 accumulator
+                 image, then a vertical (kh, 1) pass that normalizes. Two
+                 1-D passes cost kh+kw tap products per pixel vs kh*kw, the
+                 VMEM analogue of FPGA line-buffer reuse (arXiv:1710.05154).
+
+Dataflow per pass (paper Fig. 10 mapped to TPU):
+  * the batch is the leading grid axis -- grid (N, H/block_rows) -- so many
+    images stream through one compiled kernel;
+  * the kh vertical taps are kh row-shifted views of the zero-padded input
+    (the FIFO line buffers), each blocked into row bands in VMEM;
+  * the (kh, kw) coefficient table rides in SMEM and is read as scalars,
+    like the FPGA's coefficient registers;
+  * every tap product routes through the selected multiplier via the
+    signed-magnitude contract (DESIGN.md §4): p = sgn(t)*sgn(c)*mult(|t|,|c|),
+    so negative coefficients (sharpen, Sobel, Laplacian) reuse the unsigned
+    paper multipliers unchanged;
+  * the in-register accumulation is the CSA tree; `post` then applies the
+    filter's fixed-point normalization ('clip'), gradient-magnitude
+    display ('abs'), or nothing ('none', the separable intermediate).
+
+Multiplier methods: 'exact', 'refmlm', 'refmlm_nc', 'mitchell',
+'mitchell_ecc{k}', 'odma' -- see repro/core and DESIGN.md §1.
+"""
+from __future__ import annotations
+
+import functools
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.mitchell import babic_ecc as _babic_ecc
+from repro.core.mitchell import mitchell as _mitchell
+from repro.core.odma import odma as _odma
+from repro.core.refmlm import refmlm as _refmlm
+
+METHODS = ("exact", "refmlm", "refmlm_nc", "mitchell", "odma")  # + mitchell_ecc{k}
+
+#: block_rows candidates, best (deepest VMEM band) first.
+_BLOCK_ROWS = (128, 64, 32, 16, 8)
+
+
+def tap_multiplier(method: str):
+    """method -> f(a, b, nbits): elementwise product of non-negative ints."""
+    if method == "exact":
+        return lambda a, b, nbits: a * b
+    if method == "refmlm":
+        return lambda a, b, nbits: _refmlm(a, b, nbits, variant="kom4", base="efmlm").astype(jnp.int32)
+    if method == "refmlm_nc":   # 'Proposed Without Error Correction' ablation
+        return lambda a, b, nbits: _refmlm(a, b, nbits, variant="kom4", base="mlm").astype(jnp.int32)
+    if method == "mitchell":
+        return lambda a, b, nbits: _mitchell(a, b, nbits).astype(jnp.int32)
+    if m := re.fullmatch(r"mitchell_ecc(\d+)", method):
+        n = int(m.group(1))
+        return lambda a, b, nbits: _babic_ecc(a, b, nbits, num_ecc=n).astype(jnp.int32)
+    if method == "odma":
+        return lambda a, b, nbits: _odma(a, b, nbits).astype(jnp.int32)
+    raise ValueError(f"unknown multiplier method {method!r}")
+
+
+def choose_block_rows(h: int) -> int:
+    """Largest candidate band height dividing H (else the minimum: the
+    ops-level wrapper pads H up to a multiple of it)."""
+    for br in _BLOCK_ROWS:
+        if h % br == 0:
+            return br
+    return _BLOCK_ROWS[-1]
+
+
+def accumulate_taps(bands, k_ref, acc_shape, *, kh: int, kw: int, w: int,
+                    method: str, nbits: int) -> Array:
+    """Shared CSA-tree body: Σ_taps sgn * mult(|tap|, |coeff|) over a band.
+
+    `bands` -- kh arrays of shape (..., w + kw - 1); `k_ref` -- the (kh, kw)
+    SMEM coefficient table. Used by both the Pallas kernel and the pure-jnp
+    oracle so the two share one dataflow definition (bit-exactness by
+    construction).
+    """
+    mult = tap_multiplier(method)
+    acc = jnp.zeros(acc_shape, jnp.int32)
+    for di in range(kh):
+        band = bands[di]
+        for dj in range(kw):
+            tap = band[..., dj : dj + w]
+            c = k_ref[di, dj]
+            prod = mult(jnp.abs(tap), jnp.broadcast_to(jnp.abs(c), tap.shape),
+                        nbits)
+            acc = acc + jnp.sign(c) * jnp.sign(tap) * prod
+    return acc
+
+
+def apply_post(acc: Array, *, post: str, shift: int) -> Array:
+    """Fixed-point epilogue: rounding shift + clip / abs / raw (DESIGN.md §5)."""
+    if post == "none":
+        return acc
+    if post == "abs":
+        acc = jnp.abs(acc)
+    rounded = (acc + (1 << (shift - 1))) >> shift if shift > 0 else acc
+    if post in ("clip", "abs"):
+        return jnp.clip(rounded, 0, 255)
+    raise ValueError(f"unknown post {post!r}")
+
+
+def _kernel(k_ref, *refs, kh: int, kw: int, method: str, nbits: int,
+            shift: int, post: str):
+    *band_refs, o_ref = refs
+    w = o_ref.shape[-1]
+    bands = [band_refs[di][0] for di in range(kh)]      # each (br, w + kw - 1)
+    acc = accumulate_taps(bands, k_ref, o_ref.shape[1:], kh=kh, kw=kw, w=w,
+                          method=method, nbits=nbits)
+    o_ref[...] = apply_post(acc, post=post, shift=shift)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("method", "nbits", "shift",
+                                             "post", "block_rows", "interpret"))
+def conv2d_pass(
+    imgs: Array,
+    taps: Array,
+    *,
+    method: str = "refmlm",
+    nbits: int = 8,
+    shift: int = 8,
+    post: str = "clip",
+    block_rows: int | None = None,
+    interpret: bool = True,
+) -> Array:
+    """One batched convolution pass: (N, H, W) int32 -> (N, H, W) int32.
+
+    H must be a multiple of `block_rows` (defaulted from H via
+    `choose_block_rows`); callers pad and crop (see pipeline.apply_filter).
+    Input may be signed (the separable intermediate); `nbits` must cover the
+    widest |operand| on either side of each tap product.
+    """
+    n, h, w = imgs.shape
+    kh, kw = taps.shape
+    br = choose_block_rows(h) if block_rows is None else block_rows
+    assert h % br == 0, f"H={h} must be a multiple of block_rows={br}"
+    ph, pw = kh // 2, kw // 2
+    padded = jnp.pad(imgs.astype(jnp.int32), ((0, 0), (ph, ph), (pw, pw)))
+    views = [padded[:, di : di + h, :] for di in range(kh)]   # the line buffers
+    band_spec = pl.BlockSpec((1, br, w + 2 * pw), lambda nn, i: (nn, i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw, method=method, nbits=nbits,
+                          shift=shift, post=post),
+        out_shape=jax.ShapeDtypeStruct((n, h, w), jnp.int32),
+        grid=(n, h // br),
+        in_specs=[
+            pl.BlockSpec((kh, kw), lambda nn, i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            *[band_spec] * kh,
+        ],
+        out_specs=pl.BlockSpec((1, br, w), lambda nn, i: (nn, i, 0)),
+        interpret=interpret,
+    )(jnp.asarray(taps, jnp.int32), *views)
+
+
+def second_pass_nbits(intermediate_max: int, coeff_max: int) -> int:
+    """Multiplier width for the separable column pass: the narrowest
+    supported width covering both the row-pass accumulator magnitude and the
+    column coefficients (8 for narrow filters, 16 in general)."""
+    need = max(int(intermediate_max), int(coeff_max))
+    for nb in (2, 4, 8, 16):
+        if need < (1 << nb):
+            return nb
+    raise ValueError(
+        f"separable intermediate {need} exceeds the 16-bit REFMLM datapath")
+
+
+__all__ = [
+    "METHODS",
+    "accumulate_taps",
+    "apply_post",
+    "choose_block_rows",
+    "conv2d_pass",
+    "second_pass_nbits",
+    "tap_multiplier",
+]

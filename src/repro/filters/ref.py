@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the filter subsystem -- independently-written
+shift-and-accumulate loops (not the kernel's helper), so tests compare two
+implementations of the same dataflow (DESIGN.md §5).
+
+Bit-exact contract: integer in, integer out, same accumulator dtype and
+same fixed-point epilogue as the Pallas path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.filters.bank import FilterSpec, get_filter, max_intermediate
+from repro.filters.conv import second_pass_nbits, tap_multiplier
+
+
+def conv2d_ref(
+    imgs: Array,
+    taps: Array | np.ndarray,
+    *,
+    method: str = "refmlm",
+    nbits: int = 8,
+    shift: int = 8,
+    post: str = "clip",
+) -> Array:
+    """(N, H, W) int32 batched convolution oracle, signed-magnitude taps."""
+    taps = jnp.asarray(taps, jnp.int32)
+    kh, kw = taps.shape
+    n, h, w = imgs.shape
+    padded = jnp.pad(imgs.astype(jnp.int32),
+                     ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2)))
+    mult = tap_multiplier(method)
+    acc = jnp.zeros((n, h, w), jnp.int32)
+    for di in range(kh):
+        for dj in range(kw):
+            tap = padded[:, di : di + h, dj : dj + w]
+            c = taps[di, dj]
+            prod = mult(jnp.abs(tap),
+                        jnp.broadcast_to(jnp.abs(c), tap.shape), nbits)
+            acc = acc + jnp.sign(c) * jnp.sign(tap) * prod
+    if post == "none":
+        return acc
+    if post == "abs":
+        acc = jnp.abs(acc)
+    out = (acc + (1 << (shift - 1))) >> shift if shift > 0 else acc
+    return jnp.clip(out, 0, 255)
+
+
+def apply_filter_ref(
+    imgs: Array,
+    filt: FilterSpec | str,
+    *,
+    method: str = "refmlm",
+    nbits: int = 8,
+    separable: bool | None = None,
+) -> Array:
+    """Oracle for pipeline.apply_filter on an (N, H, W) batch -> uint8."""
+    spec = get_filter(filt) if isinstance(filt, str) else filt
+    if separable is None:
+        separable = spec.separable
+    if separable:
+        row = np.asarray(spec.sep_row, np.int64)[None, :]
+        col = np.asarray(spec.sep_col, np.int64)[:, None]
+        nb2 = second_pass_nbits(max_intermediate(spec),
+                                int(np.abs(spec.sep_col).max()))
+        tmp = conv2d_ref(imgs, row, method=method, nbits=nbits,
+                         shift=0, post="none")
+        out = conv2d_ref(tmp, col, method=method, nbits=nb2,
+                         shift=spec.shift, post=spec.post)
+    else:
+        out = conv2d_ref(imgs, spec.taps, method=method, nbits=nbits,
+                         shift=spec.shift, post=spec.post)
+    return out.astype(jnp.uint8)
+
+
+__all__ = ["apply_filter_ref", "conv2d_ref"]

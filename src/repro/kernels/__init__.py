@@ -2,12 +2,21 @@
 
   mitchell_matmul  -- LNS approximate matmul (VPU shift-add datapath)
   karatsuba_matmul -- exact wide-int matmul from int8 MXU passes (3 vs 4)
-  gaussian_conv    -- the paper's 3x3 Gaussian filter application
+  gaussian_conv    -- the paper's 3x3 Gaussian filter (shim over the batched
+                      multi-filter subsystem in repro.filters; DESIGN.md §5)
 
 Each has a pure-jnp oracle in ref.py (bit-exact) and jit wrappers in ops.py.
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated with interpret=True on CPU.
 """
-from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3, limb_matmul, lns_matmul
+from repro.kernels.ops import (
+    apply_filter,
+    filter_bank_apply,
+    gaussian_filter,
+    gaussian_kernel_3x3,
+    limb_matmul,
+    lns_matmul,
+)
 
-__all__ = ["lns_matmul", "limb_matmul", "gaussian_filter", "gaussian_kernel_3x3"]
+__all__ = ["lns_matmul", "limb_matmul", "gaussian_filter", "gaussian_kernel_3x3",
+           "apply_filter", "filter_bank_apply"]

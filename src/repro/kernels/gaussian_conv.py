@@ -1,38 +1,26 @@
-"""Pallas TPU kernel: 3x3 Gaussian convolution with a selectable multiplier
-(paper §3.3 -- the application the multiplier was built for).
+"""3x3 Gaussian convolution with a selectable multiplier (paper §3.3) --
+now a thin shim over the general filter subsystem in `repro.filters`.
 
-The FPGA architecture's FIFO line buffers + register window (Fig. 10) map to
-VMEM row-block tiling: each grid step holds a band of image rows; the three
-vertical taps are provided as three row-shifted views of the padded image
-(top/mid/bot), which sidesteps halo plumbing while remaining faithful to the
-three-line-buffer structure. The CSA accumulation tree is the in-register
-sum of the 9 tap products.
+Historically this module held a dedicated single-image Pallas kernel; the
+batched, multi-filter generalization lives in `repro/filters/conv.py`
+(DESIGN.md §5) and this wrapper keeps the original public surface:
 
-Every tap product goes through the selected multiplier:
-  'exact'    -- integer multiply (reference),
-  'refmlm'   -- the paper's exact recursive multiplier (identical output to
-                'exact' by Tables 6/7 -- asserted in tests),
-  'mitchell', 'mitchell_ecc{k}', 'odma' -- the approximate baselines, whose
-                PSNR degradation reproduces Table 10's comparison structure.
-
-Integer datapath: pixels in [0, 255], kernel coefficients scaled by 256
-(paper Fig. 9), output (acc + 128) >> 8 clipped to [0, 255].
+  * `gaussian_kernel_3x3`      -- the paper's Fig. 9 scale-256 tap table
+                                  (2-D-sampled; the bank's `gaussian3` uses
+                                  the separable outer-product table instead);
+  * `gaussian_conv3x3_kernel`  -- single-image (H, W) int32 conv, bit-exact
+                                  to the original kernel's dataflow;
+  * `_tap_multiplier`          -- the method -> elementwise-product mapping,
+                                  re-exported for the oracle in ref.py.
 """
 from __future__ import annotations
 
-import functools
-import re
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 from jax import Array
-from jax.experimental import pallas as pl
 
-from repro.core.mitchell import babic_ecc as _babic_ecc
-from repro.core.mitchell import mitchell as _mitchell
-from repro.core.odma import odma as _odma
-from repro.core.refmlm import refmlm as _refmlm
+from repro.filters.conv import conv2d_pass, tap_multiplier
+
+_tap_multiplier = tap_multiplier
 
 
 def gaussian_kernel_3x3(sigma: float = 1.0, scale: int = 256) -> np.ndarray:
@@ -42,37 +30,6 @@ def gaussian_kernel_3x3(sigma: float = 1.0, scale: int = 256) -> np.ndarray:
     g /= 2.0 * np.pi * sigma**2
     k = np.round(g / g.sum() * scale).astype(np.int32)
     return k
-
-
-def _tap_multiplier(method: str):
-    if method == "exact":
-        return lambda a, b, nbits: a * b
-    if method == "refmlm":
-        return lambda a, b, nbits: _refmlm(a, b, nbits, variant="kom4", base="efmlm").astype(jnp.int32)
-    if method == "refmlm_nc":   # 'Proposed Without Error Correction' ablation
-        return lambda a, b, nbits: _refmlm(a, b, nbits, variant="kom4", base="mlm").astype(jnp.int32)
-    if method == "mitchell":
-        return lambda a, b, nbits: _mitchell(a, b, nbits).astype(jnp.int32)
-    if m := re.fullmatch(r"mitchell_ecc(\d+)", method):
-        n = int(m.group(1))
-        return lambda a, b, nbits: _babic_ecc(a, b, nbits, num_ecc=n).astype(jnp.int32)
-    if method == "odma":
-        return lambda a, b, nbits: _odma(a, b, nbits).astype(jnp.int32)
-    raise ValueError(f"unknown multiplier method {method!r}")
-
-
-def _kernel(top_ref, mid_ref, bot_ref, k_ref, o_ref, *, method: str, nbits: int):
-    mult = _tap_multiplier(method)
-    rows = (top_ref[...], mid_ref[...], bot_ref[...])   # each (br, W+2) int32
-    w = o_ref.shape[1]
-    acc = jnp.zeros(o_ref.shape, jnp.int32)
-    for di in range(3):
-        band = rows[di]
-        for dj in range(3):
-            tap = band[:, dj : dj + w]
-            coeff = k_ref[di, dj]
-            acc = acc + mult(tap, jnp.broadcast_to(coeff, tap.shape), nbits)
-    o_ref[...] = jnp.clip((acc + 128) >> 8, 0, 255)
 
 
 def gaussian_conv3x3_kernel(
@@ -85,24 +42,7 @@ def gaussian_conv3x3_kernel(
     interpret: bool = True,
 ) -> Array:
     """img (H, W) int32 pixels in [0,255]; kernel (3,3) int32 scale-256."""
-    h, w = img.shape
-    assert h % block_rows == 0, f"H={h} must be a multiple of block_rows={block_rows}"
-    padded = jnp.pad(img.astype(jnp.int32), 1)          # (H+2, W+2)
-    top = padded[0:h, :]                                 # row-shifted views
-    mid = padded[1 : h + 1, :]
-    bot = padded[2 : h + 2, :]
-    grid = (h // block_rows,)
-    band_spec = pl.BlockSpec((block_rows, w + 2), lambda i: (i, 0))
-    return pl.pallas_call(
-        functools.partial(_kernel, method=method, nbits=nbits),
-        out_shape=jax.ShapeDtypeStruct((h, w), jnp.int32),
-        grid=grid,
-        in_specs=[
-            band_spec,
-            band_spec,
-            band_spec,
-            pl.BlockSpec((3, 3), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
-        interpret=interpret,
-    )(top, mid, bot, kernel.astype(jnp.int32))
+    return conv2d_pass(
+        img[None], kernel, method=method, nbits=nbits, shift=8, post="clip",
+        block_rows=block_rows, interpret=interpret,
+    )[0]

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.quant import quantize_limbs, quantize_magnitude
+from repro.filters.pipeline import apply_filter, filter_bank_apply
 from repro.kernels.gaussian_conv import gaussian_conv3x3_kernel, gaussian_kernel_3x3
 from repro.kernels.karatsuba_matmul import karatsuba_matmul_kernel
 from repro.kernels.mitchell_matmul import mitchell_matmul_kernel
@@ -95,7 +96,13 @@ def gaussian_filter(
     block_rows: int = 32,
     interpret: bool = True,
 ) -> Array:
-    """3x3 Gaussian smoothing of a uint8 image with the selected multiplier."""
+    """3x3 Gaussian smoothing of a uint8 image with the selected multiplier.
+
+    Legacy entry point (paper Fig. 9 2-D-sampled table). The general batched
+    filter bank -- Gaussian 3x3/5x5, box, sharpen, Sobel, Laplacian, direct
+    or separable -- is `apply_filter` / `filter_bank_apply` from
+    repro.filters (re-exported here; DESIGN.md §5).
+    """
     h = img.shape[0]
     pad = (-h) % block_rows
     padded = jnp.pad(img.astype(jnp.int32), ((0, pad), (0, 0)))
@@ -106,4 +113,5 @@ def gaussian_filter(
     return out[:h].astype(jnp.uint8)
 
 
-__all__ = ["lns_matmul", "limb_matmul", "gaussian_filter", "gaussian_kernel_3x3"]
+__all__ = ["lns_matmul", "limb_matmul", "gaussian_filter", "gaussian_kernel_3x3",
+           "apply_filter", "filter_bank_apply"]

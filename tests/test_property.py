@@ -1,6 +1,9 @@
 """Hypothesis property tests on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mitchell import babic_ecc, mitchell
