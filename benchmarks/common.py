@@ -1,9 +1,15 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission + the machine-readable
+BENCH_kernels.json artifact that tracks the perf trajectory across PRs."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+#: Every emit() row of this process, in order -- the JSON writer's source.
+RESULTS: list[dict] = []
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -20,4 +26,28 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
 
 
 def emit(name: str, us: float, derived: str = ""):
+    RESULTS.append({"name": name, "us_per_call": round(us, 1),
+                    "derived": derived})
     print(f"{name},{us:.1f},{derived}")
+
+
+def bench_timestamp() -> str:
+    """Artifact timestamp: the BENCH_TIMESTAMP env var when set (CI pins it
+    for reproducible artifacts), else UTC now."""
+    return os.environ.get("BENCH_TIMESTAMP") or time.strftime(
+        "%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+
+
+def write_bench_json(path: str = "BENCH_kernels.json",
+                     prefix: str = "kernel_") -> dict:
+    """Write name -> {us_per_call, derived, timestamp} for every emitted row
+    whose name starts with `prefix`; returns the written mapping."""
+    ts = bench_timestamp()
+    rows = {r["name"]: {"us_per_call": r["us_per_call"],
+                        "derived": r["derived"], "timestamp": ts}
+            for r in RESULTS if r["name"].startswith(prefix)}
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} ({len(rows)} rows)")
+    return rows

@@ -3,33 +3,75 @@ only -- the TPU roofline terms for these kernels come from the dry-run).
 
 Reports us/call + achieved element-throughput for the three kernels across
 block-size variants (the BlockSpec tuning axis of §Perf), plus the batched
-filter-bank pipeline across filters x batch sizes and the separable-vs-
-direct dataflow trade (DESIGN.md §5)."""
+filter-bank pipeline across filters x batch sizes and the three dataflow /
+tap-product trades of DESIGN.md §7:
+
+  * recursion-vs-KCM      -- per-tap KOM recursion vs constant-coefficient
+                             product-table gather (the FPGA KCM analogue);
+  * fused-vs-two-pass     -- one-kernel separable (VMEM halo band) vs two
+                             kernels with an HBM int32 intermediate;
+  * separable-vs-direct   -- kh+kw vs kh*kw tap products per pixel.
+
+``--smoke`` runs the reduced-size regression guard used by scripts/check.sh:
+the KCM path must not be slower than the recursion path on the 5x5 Gaussian.
+"""
 from __future__ import annotations
+
+import sys
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_bench_json
 from repro.filters import apply_filter
 from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3, limb_matmul, lns_matmul
 
 
+def _img_batch(rng, batch: int, h: int = 128, w: int = 128):
+    """Uniform uint8-range image batch as the int32 the datapath expects."""
+    return jnp.asarray(rng.integers(0, 256, (batch, h, w)), jnp.int32)
+
+
+def _bank_variants(imgs, *, tag: str):
+    """The §7 before/after pairs on the 5x5 Gaussian refmlm path."""
+    npix = imgs.shape[0] * imgs.shape[1] * imgs.shape[2]
+    out = {}
+    for impl in ("recurse", "kcm"):
+        us = time_fn(lambda x: apply_filter(x, "gaussian5", method="refmlm",
+                                            separable=False, mult_impl=impl),
+                     imgs, iters=3)
+        emit(f"kernel_{tag}gaussian5_refmlm_{impl}", us,
+             f"mpix_s={npix/us:.2f}")
+        out[impl] = us
+    for name, fused in (("two_pass", False), ("fused", True)):
+        us = time_fn(lambda x: apply_filter(x, "gaussian5", method="refmlm",
+                                            separable=True, fused=fused),
+                     imgs, iters=3)
+        emit(f"kernel_{tag}gaussian5_sep_{name}", us, f"mpix_s={npix/us:.2f}")
+        out[name] = us
+    emit(f"kernel_{tag}gaussian5_kcm_speedup", out["recurse"] / out["kcm"],
+         "x_vs_recurse")
+    emit(f"kernel_{tag}gaussian5_fused_speedup",
+         out["two_pass"] / out["fused"], "x_vs_two_pass")
+    return out
+
+
 def main():
     rng = np.random.default_rng(0)
-    a = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
-    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    lhs = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    rhs = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
     flops = 2 * 128 * 256 * 256
 
     for bm in (16, 32):
-        us = time_fn(lambda x, y: lns_matmul(x, y, block_m=bm), a, b, iters=3)
+        us = time_fn(lambda x, y: lns_matmul(x, y, block_m=bm), lhs, rhs, iters=3)
         emit(f"kernel_lns_matmul_bm{bm}", us, f"gflops={flops/us/1e3:.3f}")
     for ecc in (1, 3):
         us = time_fn(lambda x, y: lns_matmul(x, y, num_ecc=ecc, case_split=False),
-                     a, b, iters=3)
+                     lhs, rhs, iters=3)
         emit(f"kernel_lns_matmul_ecc{ecc}", us, f"gflops={flops/us/1e3:.3f}")
     for kar in (True, False):
-        us = time_fn(lambda x, y: limb_matmul(x, y, karatsuba=kar), a, b, iters=3)
+        us = time_fn(lambda x, y: limb_matmul(x, y, karatsuba=kar), lhs, rhs,
+                     iters=3)
         emit(f"kernel_limb_matmul_{'kom3' if kar else 'kom4'}", us,
              f"gflops={flops/us/1e3:.3f}")
 
@@ -44,19 +86,39 @@ def main():
     # config; the batch rides the leading grid axis).
     for filt in ("gaussian3", "gaussian5", "sobel_x"):
         for batch in (1, 4, 8):
-            b = jnp.asarray(rng.integers(0, 256, (batch, 128, 128)), jnp.int32)
-            us = time_fn(lambda x: apply_filter(x, filt, method="refmlm"), b,
-                         iters=3)
+            imgs = _img_batch(rng, batch)
+            us = time_fn(lambda x: apply_filter(x, filt, method="refmlm"),
+                         imgs, iters=3)
             emit(f"kernel_bank_{filt}_n{batch}", us,
                  f"mpix_s={batch*128*128/us:.2f}")
+
+    imgs = _img_batch(rng, 4)
     # separable (k+k taps) vs direct (k*k taps) on the 5x5 Gaussian.
-    b = jnp.asarray(rng.integers(0, 256, (4, 128, 128)), jnp.int32)
     for sep in (True, False):
         us = time_fn(lambda x: apply_filter(x, "gaussian5", method="refmlm",
-                                            separable=sep), b, iters=3)
+                                            separable=sep), imgs, iters=3)
         emit(f"kernel_bank_gaussian5_{'sep' if sep else 'direct'}", us,
              f"mpix_s={4*128*128/us:.2f}")
+    # the §7 before/after pairs: recursion-vs-KCM, fused-vs-two-pass.
+    _bank_variants(imgs, tag="bank_")
+
+
+def smoke(threshold: float = 1.0) -> int:
+    """Reduced-size perf regression guard (scripts/check.sh): fail when the
+    KCM path is slower than the recursion path on the 5x5 Gaussian. The
+    generous 1.0x threshold only catches the fast path *losing*, not noise."""
+    rng = np.random.default_rng(0)
+    out = _bank_variants(_img_batch(rng, 2, 64, 64), tag="smoke_")
+    speedup = out["recurse"] / out["kcm"]
+    print(f"# smoke: kcm {speedup:.2f}x vs recursion (threshold {threshold}x)")
+    if speedup < threshold:
+        print("# FAIL: KCM fast path is slower than the recursion path")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        sys.exit(smoke())
     main()
+    write_bench_json()

@@ -1,13 +1,17 @@
 """Benchmark aggregator: one module per paper table + kernel bench.
 
 ``PYTHONPATH=src python -m benchmarks.run``   prints name,us_per_call,derived
-CSV for every row and exits nonzero if any table's invariant fails.
+CSV for every row, writes the machine-readable BENCH_kernels.json perf
+artifact (name -> us_per_call/derived/timestamp; see benchmarks/common.py),
+and exits nonzero if any table's invariant fails.
 """
 from __future__ import annotations
 
 import sys
 import time
 import traceback
+
+from benchmarks.common import write_bench_json
 
 
 def main() -> None:
@@ -26,8 +30,11 @@ def main() -> None:
             failures.append(mod.__name__)
             traceback.print_exc()
     if failures:
-        print(f"# FAILED: {failures}")
+        # Don't refresh the perf artifact from a broken run -- a partial row
+        # set would silently truncate the README table downstream.
+        print(f"# FAILED: {failures} (BENCH_kernels.json not written)")
         sys.exit(1)
+    write_bench_json()
     print("# all benchmark tables passed")
 
 

@@ -1,8 +1,13 @@
 #!/usr/bin/env bash
-# Repo check: tier-1 test suite + documentation-link lint.
+# Repo check: tier-1 test suite + documentation-link lint + perf smoke.
 #
 #   scripts/check.sh            run everything
 #   scripts/check.sh --lint     doc-link lint only (fast)
+#
+# The perf smoke runs benchmarks/kernel_bench.py --smoke on a reduced size
+# and fails if the KCM constant-coefficient path is slower than the per-tap
+# recursion path on the 5x5 Gaussian (DESIGN.md §7 regression guard,
+# generous 1.0x threshold so only a real inversion trips it).
 #
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
@@ -43,3 +48,6 @@ if [[ "${1:-}" == "--lint" ]]; then
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== perf smoke (kernel_bench --smoke) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kernel_bench --smoke

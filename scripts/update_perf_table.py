@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Regenerate the README "Performance" table from BENCH_kernels.json.
+
+    PYTHONPATH=src python -m benchmarks.run        # writes BENCH_kernels.json
+    python scripts/update_perf_table.py            # splices the README table
+
+The table is the curated DESIGN.md §7 before/after story (recursion vs KCM,
+two-pass vs fused, separable vs direct); the full row set stays in the JSON
+artifact. Content between the BENCH_TABLE markers is owned by this script.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+START = "<!-- BENCH_TABLE_START -->"
+END = "<!-- BENCH_TABLE_END -->"
+
+#: (json row name, human label) in display order.
+ROWS = [
+    ("kernel_bank_gaussian5_refmlm_recurse",
+     "5×5 Gaussian, refmlm, direct, per-tap recursion"),
+    ("kernel_bank_gaussian5_refmlm_kcm",
+     "5×5 Gaussian, refmlm, direct, **KCM tables**"),
+    ("kernel_bank_gaussian5_sep_two_pass",
+     "5×5 Gaussian, refmlm, separable, two kernels (HBM intermediate)"),
+    ("kernel_bank_gaussian5_sep_fused",
+     "5×5 Gaussian, refmlm, separable, **fused kernel** (VMEM halo band)"),
+    ("kernel_bank_gaussian5_direct", "5×5 Gaussian, refmlm, direct (kh·kw taps)"),
+    ("kernel_bank_gaussian5_sep", "5×5 Gaussian, refmlm, separable (kh+kw taps)"),
+]
+SPEEDUPS = [
+    ("kernel_bank_gaussian5_kcm_speedup", "KCM vs recursion"),
+    ("kernel_bank_gaussian5_fused_speedup", "fused vs two-pass"),
+]
+
+
+def build_table(bench: dict) -> str:
+    missing = [n for n, _ in (*ROWS, *SPEEDUPS) if n not in bench]
+    if missing:
+        raise SystemExit(f"BENCH_kernels.json is missing rows {missing} -- "
+                         "stale or partial artifact; rerun the benchmarks")
+    lines = [
+        "| variant (4×128×128 batch, interpret mode) | µs/call | derived |",
+        "|---|---|---|",
+    ]
+    for name, label in ROWS:
+        row = bench[name]
+        lines.append(f"| {label} | {row['us_per_call']:.0f} | {row['derived']} |")
+    parts = [f"{label}: **{bench[name]['us_per_call']:.1f}×**"
+             for name, label in SPEEDUPS]
+    ts = next(iter(bench.values()))["timestamp"]
+    lines.append("")
+    lines.append(f"{'; '.join(parts)} (measured {ts}; regenerate with "
+                 "`python -m benchmarks.run` + this script).")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    bench_path = ROOT / "BENCH_kernels.json"
+    readme_path = ROOT / "README.md"
+    if not bench_path.exists():
+        print("BENCH_kernels.json missing -- run `python -m benchmarks.run` "
+              "(or `python -m benchmarks.kernel_bench`) first", file=sys.stderr)
+        return 1
+    bench = json.loads(bench_path.read_text())
+    readme = readme_path.read_text()
+    if START not in readme or END not in readme:
+        print("README.md is missing the BENCH_TABLE markers", file=sys.stderr)
+        return 1
+    head, rest = readme.split(START, 1)
+    _, tail = rest.split(END, 1)
+    readme_path.write_text(f"{head}{START}\n{build_table(bench)}\n{END}{tail}")
+    print("README.md performance table updated")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+"""KCM -- constant-coefficient multiplier tables (DESIGN.md §7).
+
+FPGA convolution engines rarely instantiate a general multiplier per tap:
+filter coefficients are synthesis-time constants, so each tap becomes a
+LUT/ROM-indexed *constant-coefficient multiplier* (KCM) -- the pixel value
+addresses a precomputed product table (arXiv:1710.05154). This module is the
+TPU analogue: for a given `(method, coeff, nbits)` we enumerate every
+possible operand x in [0, 2**nbits) ONCE through the selected multiplier and
+cache the resulting product table. The conv kernels then replace the per-tap
+KOM recursion (16 base multiplies at 8-bit kom4) with a single vectorized
+table gather.
+
+Because the table is computed *by* the selected multiplier, approximation
+error is preserved bit-exactly: KCM(mitchell)[x] == mitchell(x, c) for every
+x, so the approximate methods stay byte-identical to their recursion path
+(asserted in tests/test_kcm.py).
+
+Sign convention: the coefficient's sign is baked into the table
+(`table[x] = sign(c) * mult(x, |c|)`), so the kernel's signed-magnitude
+contract  sign(c)*sign(t)*mult(|t|,|c|)  reduces to  sign(t)*table[|t|].
+
+`tap_multiplier` (the method -> elementwise-product mapping) lives here so
+the table builder shares one definition with the conv kernels and the pure
+jnp oracles; `repro.filters.conv` re-exports it.
+"""
+from __future__ import annotations
+
+import re
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mitchell import babic_ecc as _babic_ecc
+from repro.core.mitchell import mitchell as _mitchell
+from repro.core.odma import odma as _odma
+from repro.core.refmlm import refmlm as _refmlm
+
+METHODS = ("exact", "refmlm", "refmlm_nc", "mitchell", "odma")  # + mitchell_ecc{k}
+
+
+def tap_multiplier(method: str):
+    """method -> f(a, b, nbits): elementwise product of non-negative ints."""
+    if method == "exact":
+        return lambda a, b, nbits: a * b
+    if method == "refmlm":
+        return lambda a, b, nbits: _refmlm(a, b, nbits, variant="kom4", base="efmlm").astype(jnp.int32)
+    if method == "refmlm_nc":   # 'Proposed Without Error Correction' ablation
+        return lambda a, b, nbits: _refmlm(a, b, nbits, variant="kom4", base="mlm").astype(jnp.int32)
+    if method == "mitchell":
+        return lambda a, b, nbits: _mitchell(a, b, nbits).astype(jnp.int32)
+    if m := re.fullmatch(r"mitchell_ecc(\d+)", method):
+        n = int(m.group(1))
+        return lambda a, b, nbits: _babic_ecc(a, b, nbits, num_ecc=n).astype(jnp.int32)
+    if method == "odma":
+        return lambda a, b, nbits: _odma(a, b, nbits).astype(jnp.int32)
+    raise ValueError(f"unknown multiplier method {method!r}")
+
+
+@lru_cache(maxsize=None)
+def product_table(method: str, coeff: int, nbits: int) -> np.ndarray:
+    """(2**nbits,) int32 KCM ROM:  table[x] = sign(coeff) * mult(x, |coeff|).
+
+    Enumerates the full operand range through the selected multiplier once
+    (cached per (method, coeff, nbits) across all filters and calls), so the
+    gather path inherits the multiplier's exact error behaviour.
+    """
+    mult = tap_multiplier(method)
+    xs = jnp.arange(1 << nbits, dtype=jnp.int32)
+    cs = jnp.full_like(xs, abs(int(coeff)))
+    tab = np.asarray(mult(xs, cs, nbits), dtype=np.int64)
+    return (int(np.sign(coeff)) * tab).astype(np.int32)
+
+
+def filter_tables(method: str, taps, nbits: int) -> np.ndarray:
+    """Stacked per-tap KCM ROMs for a coefficient table.
+
+    `taps` -- any integer array of trace-time-constant coefficients; returns
+    (taps.size, 2**nbits) int32, rows in C (row-major tap) order.
+    """
+    flat = np.asarray(taps, dtype=np.int64).reshape(-1)
+    return np.stack([product_table(method, int(c), nbits) for c in flat])
+
+
+__all__ = ["METHODS", "filter_tables", "product_table", "tap_multiplier"]

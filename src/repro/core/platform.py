@@ -1,0 +1,24 @@
+"""Backend detection for the Pallas kernels (DESIGN.md §7).
+
+Every kernel wrapper takes `interpret: bool | None`. `None` means
+autodetect: compile for real on a TPU backend, fall back to the Pallas
+interpreter elsewhere (the CPU containers this repo's tests run in). An
+explicit True/False always wins -- interpret=True on TPU remains the
+debugging escape hatch the Pallas guide recommends.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True unless the default JAX backend is a TPU (Pallas compiles there)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Apply the interpret=None -> autodetect convention."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+__all__ = ["default_interpret", "resolve_interpret"]

@@ -24,6 +24,18 @@ Base variants:
 
 Widths: nbits in {2, 4, 8, 16} (paper max is 16x16). Products are exact in
 uint32 lanes at 16 bits, so no x64 mode is required.
+
+Evaluation strategies (DESIGN.md §7):
+
+  flatten=True (default) -- digit-plane flattening: the recursion tree is
+      *linear* in its 2x2 base products (every sub-product enters the result
+      as  weight * sign * base(a_i, b_i)  for a static power-of-two weight),
+      so all leaves execute as ONE stacked base call over a leading
+      digit-plane axis -- 16 kernel-visible base calls collapse to 1 at
+      8-bit kom4 (64 -> 1 at 16-bit). Bit-identical to the unrolled
+      recursion by construction, asserted in tests/test_kcm.py.
+  flatten=False -- the paper-literal Python-unrolled recursion, kept as the
+      structural reference.
 """
 from __future__ import annotations
 
@@ -100,6 +112,80 @@ def _recurse(a: Array, b: Array, nbits: int, base_fn, variant: str) -> Array:
     )
 
 
+def _leaves(a: Array, b: Array, nbits: int, variant: str, weight: int,
+            sign, out: list) -> None:
+    """Collect the digit-plane leaf terms of the KOM recursion.
+
+    Appends (a2, b2, weight, sign) tuples: 2-bit operand planes whose base
+    product contributes  weight * sign * base(a2, b2)  to the n-bit result.
+    `weight` is a static int (a sum of the recursion's shifts -- e.g. the
+    kom3 low term enters both at weight 1 and, via mid, at 2**half, so its
+    leaf carries 1 + 2**half); `sign` is None (+1) or an int32 array in
+    {-1, 0, 1} accumulated down nested kom3 cross terms.
+    """
+    if nbits == 2:
+        out.append((a, b, weight, sign))
+        return
+    half = nbits // 2
+    a_h, a_l = split_halves(a, nbits)
+    b_h, b_l = split_halves(b, nbits)
+    if variant == "kom4":
+        # P = low + (mid1 + mid2) << half + high << nbits (Table 2 steps 5-8).
+        _leaves(a_l, b_l, half, variant, weight, sign, out)
+        _leaves(a_h, b_l, half, variant, weight << half, sign, out)
+        _leaves(a_l, b_h, half, variant, weight << half, sign, out)
+        _leaves(a_h, b_h, half, variant, weight << nbits, sign, out)
+    elif variant == "kom3":
+        # P = low + (low + high + s*t) << half + high << nbits (eq. 19):
+        # low and high each fold into one leaf with a combined weight.
+        _leaves(a_l, b_l, half, variant, weight * (1 + (1 << half)), sign, out)
+        _leaves(a_h, b_h, half, variant,
+                weight * ((1 << half) + (1 << nbits)), sign, out)
+        dl = a_l - a_h
+        dr = b_h - b_l
+        s = jnp.sign(dl) * jnp.sign(dr)
+        _leaves(jnp.abs(dl), jnp.abs(dr), half, variant, weight << half,
+                s if sign is None else sign * s, out)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+
+def _recurse_flat(a: Array, b: Array, nbits: int, base_fn, variant: str) -> Array:
+    """Digit-plane-flattened KOM: one stacked base call, then the weighted sum.
+
+    Bit-identical to `_recurse`: the leaf weights are exactly the composed
+    shifts of the recursion, the base products are <= 9, and the combining
+    arithmetic is carried in the same product dtype (int32 below 16 bits,
+    uint32 at 16) where the recursion's adds are already modular. kom3's
+    data-dependent sign is applied to the small leaf product first and split
+    into positive/negative accumulators so no signed value is ever cast to
+    uint32.
+    """
+    if nbits == 2:
+        return base_fn(a, b)
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    leaves: list = []
+    _leaves(jnp.broadcast_to(a, shape), jnp.broadcast_to(b, shape),
+            nbits, variant, 1, None, leaves)
+    planes_a = jnp.stack([la for la, _, _, _ in leaves])
+    planes_b = jnp.stack([lb for _, lb, _, _ in leaves])
+    prods = base_fn(planes_a, planes_b)          # ONE (L, ...) base multiply
+    dt = _prod_dtype(nbits)
+    pos = jnp.zeros(shape, dt)
+    neg = jnp.zeros(shape, dt)
+    for i, (_, _, weight, sign) in enumerate(leaves):
+        w = jnp.asarray(weight, dt)
+        if sign is None:
+            pos = pos + w * prods[i].astype(dt)
+        else:
+            st = sign * prods[i].astype(jnp.int32)       # |st| <= 9
+            pos = pos + w * jnp.where(st > 0, st, 0).astype(dt)
+            neg = neg + w * jnp.where(st < 0, -st, 0).astype(dt)
+    return pos - neg                 # modular in dt, result in [0, 2**2n)
+
+
 def refmlm(
     a: Array,
     b: Array,
@@ -107,6 +193,7 @@ def refmlm(
     *,
     variant: str = "kom4",
     base: str = "efmlm",
+    flatten: bool = True,
 ) -> Array:
     """The paper's recursive multiplier, vectorized over tensors.
 
@@ -117,6 +204,9 @@ def refmlm(
         Karatsuba 3-product split).
       base: 'efmlm' (error-free base => exact product) or 'mlm' (uncorrected
         base => error propagates, the paper's ablation).
+      flatten: evaluate all base multiplies as one stacked digit-plane call
+        (default; bit-identical, far fewer kernel-visible ops) or as the
+        paper-literal unrolled recursion.
     Returns:
       The 2*nbits-bit product (exact iff base='efmlm').
     """
@@ -124,7 +214,8 @@ def refmlm(
     if nbits not in SUPPORTED_WIDTHS:
         raise ValueError(f"nbits must be one of {SUPPORTED_WIDTHS}, got {nbits}")
     base_fn = {"efmlm": efmlm2, "mlm": mlm2}[base]
-    return _recurse(a, b, nbits, base_fn, variant)
+    impl = _recurse_flat if flatten else _recurse
+    return impl(a, b, nbits, base_fn, variant)
 
 
 refmlm16 = partial(refmlm, nbits=16)

@@ -14,17 +14,27 @@ from repro.filters.bank import (
     gaussian_kernel_1d,
     get_filter,
 )
-from repro.filters.conv import choose_block_rows, conv2d_pass, tap_multiplier
+from repro.filters.conv import (
+    METHODS,
+    MULT_IMPLS,
+    choose_block_rows,
+    conv2d_pass,
+    fused_separable_pass,
+    tap_multiplier,
+)
 from repro.filters.pipeline import apply_filter, filter_bank_apply
 
 __all__ = [
     "FILTER_BANK",
     "FILTER_NAMES",
+    "METHODS",
+    "MULT_IMPLS",
     "FilterSpec",
     "apply_filter",
     "choose_block_rows",
     "conv2d_pass",
     "filter_bank_apply",
+    "fused_separable_pass",
     "gaussian_kernel_1d",
     "get_filter",
     "tap_multiplier",

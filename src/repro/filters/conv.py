@@ -1,13 +1,19 @@
-"""Batched multiplier-selectable 2-D convolution Pallas kernel (DESIGN.md §5).
+"""Batched multiplier-selectable 2-D convolution Pallas kernels (DESIGN.md §5,
+performance engineering in §7).
 
 Generalization of the original single-image 3x3 Gaussian kernel: one kernel
-body serves every filter of the bank, in either dataflow --
+body serves every filter of the bank, in three dataflows --
 
   * direct    -- one pass over the (kh, kw) tap table;
   * separable -- a horizontal (1, kw) pass producing a raw int32 accumulator
                  image, then a vertical (kh, 1) pass that normalizes. Two
                  1-D passes cost kh+kw tap products per pixel vs kh*kw, the
-                 VMEM analogue of FPGA line-buffer reuse (arXiv:1710.05154).
+                 VMEM analogue of FPGA line-buffer reuse (arXiv:1710.05154);
+  * fused separable -- both 1-D passes in ONE `pallas_call`: the horizontal
+                 pass lands in a VMEM band carrying a kh//2-row halo and the
+                 vertical pass consumes it in-kernel, eliminating the HBM
+                 round-trip of the (N, H, W) int32 intermediate
+                 (`fused_separable_pass`, DESIGN.md §7).
 
 Dataflow per pass (paper Fig. 10 mapped to TPU):
   * the batch is the leading grid axis -- grid (N, H/block_rows) -- so many
@@ -24,13 +30,21 @@ Dataflow per pass (paper Fig. 10 mapped to TPU):
     filter's fixed-point normalization ('clip'), gradient-magnitude
     display ('abs'), or nothing ('none', the separable intermediate).
 
+Tap-product implementations (`mult_impl`, DESIGN.md §7):
+  * 'recurse' -- expand the selected multiplier's dataflow per tap (the
+    digit-plane-flattened KOM recursion for 'refmlm');
+  * 'kcm'     -- constant-coefficient fast path: coefficients are trace-time
+    constants, so each tap is a `repro.core.kcm` product-table gather
+    (sign baked in), bit-identical to 'recurse' for every method;
+  * 'auto'    -- 'kcm' whenever the taps are static (not traced), else
+    'recurse'.
+
 Multiplier methods: 'exact', 'refmlm', 'refmlm_nc', 'mitchell',
 'mitchell_ecc{k}', 'odma' -- see repro/core and DESIGN.md §1.
 """
 from __future__ import annotations
 
 import functools
-import re
 
 import jax
 import jax.numpy as jnp
@@ -39,33 +53,13 @@ from jax import Array
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.mitchell import babic_ecc as _babic_ecc
-from repro.core.mitchell import mitchell as _mitchell
-from repro.core.odma import odma as _odma
-from repro.core.refmlm import refmlm as _refmlm
+from repro.core.kcm import METHODS, filter_tables, tap_multiplier
+from repro.core.platform import resolve_interpret
 
-METHODS = ("exact", "refmlm", "refmlm_nc", "mitchell", "odma")  # + mitchell_ecc{k}
+MULT_IMPLS = ("recurse", "kcm", "auto")
 
 #: block_rows candidates, best (deepest VMEM band) first.
 _BLOCK_ROWS = (128, 64, 32, 16, 8)
-
-
-def tap_multiplier(method: str):
-    """method -> f(a, b, nbits): elementwise product of non-negative ints."""
-    if method == "exact":
-        return lambda a, b, nbits: a * b
-    if method == "refmlm":
-        return lambda a, b, nbits: _refmlm(a, b, nbits, variant="kom4", base="efmlm").astype(jnp.int32)
-    if method == "refmlm_nc":   # 'Proposed Without Error Correction' ablation
-        return lambda a, b, nbits: _refmlm(a, b, nbits, variant="kom4", base="mlm").astype(jnp.int32)
-    if method == "mitchell":
-        return lambda a, b, nbits: _mitchell(a, b, nbits).astype(jnp.int32)
-    if m := re.fullmatch(r"mitchell_ecc(\d+)", method):
-        n = int(m.group(1))
-        return lambda a, b, nbits: _babic_ecc(a, b, nbits, num_ecc=n).astype(jnp.int32)
-    if method == "odma":
-        return lambda a, b, nbits: _odma(a, b, nbits).astype(jnp.int32)
-    raise ValueError(f"unknown multiplier method {method!r}")
 
 
 def choose_block_rows(h: int) -> int:
@@ -78,24 +72,32 @@ def choose_block_rows(h: int) -> int:
 
 
 def accumulate_taps(bands, k_ref, acc_shape, *, kh: int, kw: int, w: int,
-                    method: str, nbits: int) -> Array:
+                    method: str, nbits: int, tables=None) -> Array:
     """Shared CSA-tree body: Σ_taps sgn * mult(|tap|, |coeff|) over a band.
 
     `bands` -- kh arrays of shape (..., w + kw - 1); `k_ref` -- the (kh, kw)
-    SMEM coefficient table. Used by both the Pallas kernel and the pure-jnp
-    oracle so the two share one dataflow definition (bit-exactness by
+    SMEM coefficient table. Used by both the Pallas kernels and the pure-jnp
+    oracle so the dataflows share one definition (bit-exactness by
     construction).
+
+    With `tables` (a (kh*kw, 2**nbits) KCM ROM stack, coefficient signs
+    baked in) each tap product becomes a gather -- `k_ref`/`method` are then
+    unused and the contract reduces to sgn(tap) * tables[tap_idx][|tap|].
     """
-    mult = tap_multiplier(method)
     acc = jnp.zeros(acc_shape, jnp.int32)
+    mult = None if tables is not None else tap_multiplier(method)
     for di in range(kh):
         band = bands[di]
         for dj in range(kw):
             tap = band[..., dj : dj + w]
-            c = k_ref[di, dj]
-            prod = mult(jnp.abs(tap), jnp.broadcast_to(jnp.abs(c), tap.shape),
-                        nbits)
-            acc = acc + jnp.sign(c) * jnp.sign(tap) * prod
+            if tables is not None:
+                prod = jnp.take(tables[di * kw + dj], jnp.abs(tap), axis=0)
+                acc = acc + jnp.sign(tap) * prod
+            else:
+                c = k_ref[di, dj]
+                prod = mult(jnp.abs(tap),
+                            jnp.broadcast_to(jnp.abs(c), tap.shape), nbits)
+                acc = acc + jnp.sign(c) * jnp.sign(tap) * prod
     return acc
 
 
@@ -111,18 +113,100 @@ def apply_post(acc: Array, *, post: str, shift: int) -> Array:
     raise ValueError(f"unknown post {post!r}")
 
 
-def _kernel(k_ref, *refs, kh: int, kw: int, method: str, nbits: int,
-            shift: int, post: str):
+@functools.lru_cache(maxsize=None)
+def _device_tables(method: str, taps_key: tuple, shape: tuple, nbits: int):
+    """Stacked KCM ROMs as a device array, cached per coefficient table.
+
+    `product_table` already caches the per-coefficient host ROMs; this layer
+    keeps the stacked, device-put array out of the per-call hot path (the
+    16-bit second-pass stack is ~256 KiB per tap)."""
+    taps = np.asarray(taps_key, np.int64).reshape(shape)
+    return jnp.asarray(filter_tables(method, taps, nbits))
+
+
+def _tables_for(method: str, taps, nbits: int):
+    flat = np.asarray(taps, np.int64)
+    return _device_tables(method, tuple(flat.reshape(-1).tolist()),
+                          flat.shape, nbits)
+
+
+def _is_static(taps) -> bool:
+    """True iff `taps` has concrete (trace-time-constant) values."""
+    try:
+        np.asarray(taps)
+        return True
+    except Exception:                                    # jax Tracer
+        return False
+
+
+def _resolve_mult_impl(mult_impl: str, *tap_arrays) -> str:
+    if mult_impl not in MULT_IMPLS:
+        raise ValueError(f"mult_impl must be one of {MULT_IMPLS}, got {mult_impl!r}")
+    static = all(_is_static(t) for t in tap_arrays)
+    if mult_impl == "auto":
+        return "kcm" if static else "recurse"
+    if mult_impl == "kcm" and not static:
+        raise ValueError("mult_impl='kcm' needs trace-time-constant taps; "
+                         "traced coefficients must use 'recurse'")
+    return mult_impl
+
+
+# ---------------------------------------------------------------- single pass
+
+def _kernel(coef_ref, *refs, kh: int, kw: int, method: str, nbits: int,
+            shift: int, post: str, kcm: bool):
     *band_refs, o_ref = refs
     w = o_ref.shape[-1]
     bands = [band_refs[di][0] for di in range(kh)]      # each (br, w + kw - 1)
-    acc = accumulate_taps(bands, k_ref, o_ref.shape[1:], kh=kh, kw=kw, w=w,
-                          method=method, nbits=nbits)
+    acc = accumulate_taps(bands, None if kcm else coef_ref, o_ref.shape[1:],
+                          kh=kh, kw=kw, w=w, method=method, nbits=nbits,
+                          tables=coef_ref[...] if kcm else None)
     o_ref[...] = apply_post(acc, post=post, shift=shift)[None]
+
+
+def _pass_call(imgs: Array, coef: Array, coef_spec, kernel, *, kh: int,
+               kw: int, block_rows: int, interpret: bool) -> Array:
+    """Shared pallas_call plumbing for one blocked convolution pass."""
+    n, h, w = imgs.shape
+    assert h % block_rows == 0, \
+        f"H={h} must be a multiple of block_rows={block_rows}"
+    ph, pw = kh // 2, kw // 2
+    padded = jnp.pad(imgs.astype(jnp.int32), ((0, 0), (ph, ph), (pw, pw)))
+    views = [padded[:, di : di + h, :] for di in range(kh)]  # the line buffers
+    band_spec = pl.BlockSpec((1, block_rows, w + 2 * pw), lambda nn, i: (nn, i, 0))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, h, w), jnp.int32),
+        grid=(n, h // block_rows),
+        in_specs=[coef_spec, *[band_spec] * kh],
+        out_specs=pl.BlockSpec((1, block_rows, w), lambda nn, i: (nn, i, 0)),
+        interpret=interpret,
+    )(coef, *views)
 
 
 @functools.partial(jax.jit, static_argnames=("method", "nbits", "shift",
                                              "post", "block_rows", "interpret"))
+def _conv2d_recurse(imgs, taps, *, method, nbits, shift, post, block_rows,
+                    interpret):
+    kh, kw = taps.shape
+    kernel = functools.partial(_kernel, kh=kh, kw=kw, method=method,
+                               nbits=nbits, shift=shift, post=post, kcm=False)
+    spec = pl.BlockSpec((kh, kw), lambda nn, i: (0, 0),
+                        memory_space=pltpu.SMEM)
+    return _pass_call(imgs, taps, spec, kernel, kh=kh, kw=kw,
+                      block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "shift", "post",
+                                             "block_rows", "interpret"))
+def _conv2d_kcm(imgs, tables, *, kh, kw, shift, post, block_rows, interpret):
+    kernel = functools.partial(_kernel, kh=kh, kw=kw, method="", nbits=0,
+                               shift=shift, post=post, kcm=True)
+    spec = pl.BlockSpec(tables.shape, lambda nn, i: (0, 0))  # whole ROM, VMEM
+    return _pass_call(imgs, tables, spec, kernel, kh=kh, kw=kw,
+                      block_rows=block_rows, interpret=interpret)
+
+
 def conv2d_pass(
     imgs: Array,
     taps: Array,
@@ -132,36 +216,150 @@ def conv2d_pass(
     shift: int = 8,
     post: str = "clip",
     block_rows: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    mult_impl: str = "auto",
 ) -> Array:
     """One batched convolution pass: (N, H, W) int32 -> (N, H, W) int32.
 
     H must be a multiple of `block_rows` (defaulted from H via
     `choose_block_rows`); callers pad and crop (see pipeline.apply_filter).
     Input may be signed (the separable intermediate); `nbits` must cover the
-    widest |operand| on either side of each tap product.
+    widest |operand| on either side of each tap product. interpret=None
+    autodetects the backend (DESIGN.md §7); mult_impl picks the tap-product
+    implementation (module docstring).
     """
+    interpret = resolve_interpret(interpret)
+    br = choose_block_rows(imgs.shape[1]) if block_rows is None else block_rows
+    impl = _resolve_mult_impl(mult_impl, taps)
+    if impl == "kcm":
+        taps_np = np.asarray(taps)
+        tables = _tables_for(method, taps_np, nbits)
+        return _conv2d_kcm(imgs, tables, kh=taps_np.shape[0],
+                           kw=taps_np.shape[1], shift=shift, post=post,
+                           block_rows=br, interpret=interpret)
+    return _conv2d_recurse(imgs, jnp.asarray(taps, jnp.int32), method=method,
+                           nbits=nbits, shift=shift, post=post,
+                           block_rows=br, interpret=interpret)
+
+
+# ------------------------------------------------------------ fused separable
+
+def _fused_kernel(row_ref, col_ref, a_ref, b_ref, o_ref, *, kh: int, kw: int,
+                  method: str, nbits: int, nbits2: int, shift: int, post: str,
+                  kcm: bool):
+    """Both separable passes on one band (DESIGN.md §7 halo math).
+
+    a_ref/b_ref are band views i and i+1 of the same padded image, so their
+    concatenation holds the br + 2*(kh//2) input rows whose horizontal pass
+    feeds the band's vertical window. The horizontal accumulator never
+    leaves VMEM.
+    """
+    br, w = o_ref.shape[1], o_ref.shape[2]
+    ph = kh // 2
+    full = jnp.concatenate([a_ref[0], b_ref[0]], axis=0)[: br + 2 * ph]
+    hacc = accumulate_taps([full], None if kcm else row_ref,
+                           (br + 2 * ph, w), kh=1, kw=kw, w=w, method=method,
+                           nbits=nbits, tables=row_ref[...] if kcm else None)
+    vbands = [hacc[di : di + br] for di in range(kh)]
+    acc = accumulate_taps(vbands, None if kcm else col_ref, (br, w),
+                          kh=kh, kw=1, w=w, method=method, nbits=nbits2,
+                          tables=col_ref[...] if kcm else None)
+    o_ref[...] = apply_post(acc, post=post, shift=shift)[None]
+
+
+def _fused_call(imgs: Array, row, col, row_spec, col_spec, kernel, *,
+                kh: int, kw: int, block_rows: int, interpret: bool) -> Array:
     n, h, w = imgs.shape
-    kh, kw = taps.shape
-    br = choose_block_rows(h) if block_rows is None else block_rows
+    br = block_rows
     assert h % br == 0, f"H={h} must be a multiple of block_rows={br}"
     ph, pw = kh // 2, kw // 2
-    padded = jnp.pad(imgs.astype(jnp.int32), ((0, 0), (ph, ph), (pw, pw)))
-    views = [padded[:, di : di + h, :] for di in range(kh)]   # the line buffers
-    band_spec = pl.BlockSpec((1, br, w + 2 * pw), lambda nn, i: (nn, i, 0))
+    assert br >= 2 * ph, f"block_rows={br} too shallow for a {ph}-row halo"
+    nb = h // br
+    # ph halo rows on top; bottom-pad so band view i+1 exists for every band
+    # (the extra rows are zeros and only ever read as halo).
+    padded = jnp.pad(imgs.astype(jnp.int32),
+                     ((0, 0), (ph, (nb + 1) * br - h - ph), (pw, pw)))
+    band = (1, br, w + 2 * pw)
     return pl.pallas_call(
-        functools.partial(_kernel, kh=kh, kw=kw, method=method, nbits=nbits,
-                          shift=shift, post=post),
+        kernel,
         out_shape=jax.ShapeDtypeStruct((n, h, w), jnp.int32),
-        grid=(n, h // br),
+        grid=(n, nb),
         in_specs=[
-            pl.BlockSpec((kh, kw), lambda nn, i: (0, 0),
-                         memory_space=pltpu.SMEM),
-            *[band_spec] * kh,
+            row_spec,
+            col_spec,
+            pl.BlockSpec(band, lambda nn, i: (nn, i, 0)),
+            pl.BlockSpec(band, lambda nn, i: (nn, i + 1, 0)),
         ],
         out_specs=pl.BlockSpec((1, br, w), lambda nn, i: (nn, i, 0)),
         interpret=interpret,
-    )(jnp.asarray(taps, jnp.int32), *views)
+    )(row, col, padded, padded)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "nbits", "nbits2",
+                                             "shift", "post", "block_rows",
+                                             "interpret"))
+def _fused_sep_recurse(imgs, row, col, *, method, nbits, nbits2, shift, post,
+                       block_rows, interpret):
+    kh, kw = col.shape[0], row.shape[1]
+    kernel = functools.partial(_fused_kernel, kh=kh, kw=kw, method=method,
+                               nbits=nbits, nbits2=nbits2, shift=shift,
+                               post=post, kcm=False)
+    smem = functools.partial(pl.BlockSpec, index_map=lambda nn, i: (0, 0),
+                             memory_space=pltpu.SMEM)
+    return _fused_call(imgs, row, col, smem((1, kw)), smem((kh, 1)), kernel,
+                       kh=kh, kw=kw, block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "shift", "post",
+                                             "block_rows", "interpret"))
+def _fused_sep_kcm(imgs, row_tables, col_tables, *, kh, kw, shift, post,
+                   block_rows, interpret):
+    kernel = functools.partial(_fused_kernel, kh=kh, kw=kw, method="",
+                               nbits=0, nbits2=0, shift=shift, post=post,
+                               kcm=True)
+    rspec = pl.BlockSpec(row_tables.shape, lambda nn, i: (0, 0))
+    cspec = pl.BlockSpec(col_tables.shape, lambda nn, i: (0, 0))
+    return _fused_call(imgs, row_tables, col_tables, rspec, cspec, kernel,
+                       kh=kh, kw=kw, block_rows=block_rows, interpret=interpret)
+
+
+def fused_separable_pass(
+    imgs: Array,
+    row: Array,
+    col: Array,
+    *,
+    method: str = "refmlm",
+    nbits: int = 8,
+    nbits2: int = 16,
+    shift: int = 8,
+    post: str = "clip",
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    mult_impl: str = "auto",
+) -> Array:
+    """Fused separable convolution: both 1-D passes in one `pallas_call`.
+
+    Bit-identical to `conv2d_pass(row, post='none')` followed by
+    `conv2d_pass(col)` -- the horizontal accumulator band (with its
+    kh//2-row halo) just stays in VMEM instead of round-tripping through
+    HBM (DESIGN.md §7). `row` is the (kw,) horizontal filter at width
+    `nbits`, `col` the (kh,) vertical filter at width `nbits2`
+    (see `second_pass_nbits`).
+    """
+    interpret = resolve_interpret(interpret)
+    br = choose_block_rows(imgs.shape[1]) if block_rows is None else block_rows
+    impl = _resolve_mult_impl(mult_impl, row, col)
+    if impl == "kcm":
+        rt = _tables_for(method, row, nbits)
+        ct = _tables_for(method, col, nbits2)
+        return _fused_sep_kcm(imgs, rt, ct, kh=ct.shape[0], kw=rt.shape[0],
+                              shift=shift, post=post, block_rows=br,
+                              interpret=interpret)
+    row = jnp.asarray(row, jnp.int32).reshape(1, -1)
+    col = jnp.asarray(col, jnp.int32).reshape(-1, 1)
+    return _fused_sep_recurse(imgs, row, col, method=method, nbits=nbits,
+                              nbits2=nbits2, shift=shift, post=post,
+                              block_rows=br, interpret=interpret)
 
 
 def second_pass_nbits(intermediate_max: int, coeff_max: int) -> int:
@@ -178,10 +376,12 @@ def second_pass_nbits(intermediate_max: int, coeff_max: int) -> int:
 
 __all__ = [
     "METHODS",
+    "MULT_IMPLS",
     "accumulate_taps",
     "apply_post",
     "choose_block_rows",
     "conv2d_pass",
+    "fused_separable_pass",
     "second_pass_nbits",
     "tap_multiplier",
 ]

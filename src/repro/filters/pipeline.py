@@ -24,7 +24,12 @@ from repro.filters.bank import (
     get_filter,
     max_intermediate,
 )
-from repro.filters.conv import choose_block_rows, conv2d_pass, second_pass_nbits
+from repro.filters.conv import (
+    choose_block_rows,
+    conv2d_pass,
+    fused_separable_pass,
+    second_pass_nbits,
+)
 
 
 def _normalize(imgs: Array) -> tuple[Array, tuple[int, ...]]:
@@ -50,22 +55,33 @@ def _restore(out: Array, orig: tuple[int, ...]) -> Array:
 
 
 def _apply(imgs: Array, spec: FilterSpec, method: str, nbits: int,
-           separable: bool, block_rows: int | None, interpret: bool) -> Array:
+           separable: bool, fused: bool, mult_impl: str,
+           block_rows: int | None, interpret: bool | None) -> Array:
     n, h, w = imgs.shape
     br = choose_block_rows(h) if block_rows is None else block_rows
     padded = jnp.pad(imgs, ((0, 0), (0, (-h) % br), (0, 0)))
-    run = partial(conv2d_pass, block_rows=br, interpret=interpret)
     if separable:
-        row = jnp.asarray(spec.sep_row, jnp.int32)[None, :]     # (1, kw)
-        col = jnp.asarray(spec.sep_col, jnp.int32)[:, None]     # (kh, 1)
         nb2 = second_pass_nbits(max_intermediate(spec),
                                 int(np.abs(spec.sep_col).max()))
-        tmp = run(padded, row, method=method, nbits=nbits, shift=0, post="none")
-        out = run(tmp, col, method=method, nbits=nb2, shift=spec.shift,
-                  post=spec.post)
+        if fused:
+            out = fused_separable_pass(
+                padded, spec.sep_row, spec.sep_col, method=method,
+                nbits=nbits, nbits2=nb2, shift=spec.shift, post=spec.post,
+                block_rows=br, interpret=interpret, mult_impl=mult_impl)
+        else:
+            run = partial(conv2d_pass, block_rows=br, interpret=interpret,
+                          mult_impl=mult_impl)
+            row = jnp.asarray(spec.sep_row, jnp.int32)[None, :]  # (1, kw)
+            col = jnp.asarray(spec.sep_col, jnp.int32)[:, None]  # (kh, 1)
+            tmp = run(padded, row, method=method, nbits=nbits, shift=0,
+                      post="none")
+            out = run(tmp, col, method=method, nbits=nb2, shift=spec.shift,
+                      post=spec.post)
     else:
-        out = run(padded, jnp.asarray(spec.taps, jnp.int32), method=method,
-                  nbits=nbits, shift=spec.shift, post=spec.post)
+        out = conv2d_pass(padded, jnp.asarray(spec.taps, jnp.int32),
+                          method=method, nbits=nbits, shift=spec.shift,
+                          post=spec.post, block_rows=br, interpret=interpret,
+                          mult_impl=mult_impl)
     return out[:, :h].astype(jnp.uint8)
 
 
@@ -76,22 +92,34 @@ def apply_filter(
     method: str = "refmlm",
     nbits: int = 8,
     separable: bool | None = None,
+    fused: bool | None = None,
+    mult_impl: str = "auto",
     block_rows: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     """Run one bank filter over an image batch through the selected multiplier.
 
     separable=None picks the two-pass dataflow whenever the spec admits one;
     force False to compare against the direct KxK window (bit-identical for
-    exact multipliers -- asserted in tests).
+    exact multipliers -- asserted in tests). When separable, fused=None/True
+    runs both 1-D passes in one kernel (DESIGN.md §7); fused=False forces
+    the two-kernel dataflow with its HBM intermediate (the before/after
+    benchmark axis). mult_impl picks the tap-product implementation
+    ('recurse' | 'kcm' | 'auto', see repro.filters.conv); interpret=None
+    autodetects the backend.
     """
     spec = get_filter(filt) if isinstance(filt, str) else filt
     if separable is None:
         separable = spec.separable
     if separable and not spec.separable:
         raise ValueError(f"filter {spec.name!r} has no separable decomposition")
+    if fused is None:
+        fused = separable
+    if fused and not separable:
+        raise ValueError("fused=True requires the separable dataflow")
     arr, orig = _normalize(imgs)
-    out = _apply(arr, spec, method, nbits, separable, block_rows, interpret)
+    out = _apply(arr, spec, method, nbits, separable, fused, mult_impl,
+                 block_rows, interpret)
     return _restore(out, orig)
 
 

@@ -39,7 +39,7 @@ def gaussian_conv3x3_kernel(
     method: str = "refmlm",
     nbits: int = 8,
     block_rows: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     """img (H, W) int32 pixels in [0,255]; kernel (3,3) int32 scale-256."""
     return conv2d_pass(

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax import Array
 from jax.experimental import pallas as pl
 
+from repro.core.platform import resolve_interpret
+
 
 def _kernel(ah_ref, al_ref, bh_ref, bl_ref, hh_ref, mid_ref, ll_ref, *, karatsuba: bool):
     @pl.when(pl.program_id(2) == 0)
@@ -59,9 +61,11 @@ def karatsuba_matmul_kernel(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[Array, Array, Array]:
-    """Raw kernel entry over pre-decomposed limbs; returns (hh, mid, ll)."""
+    """Raw kernel entry over pre-decomposed limbs; returns (hh, mid, ll).
+    interpret=None autodetects the backend (DESIGN.md §7)."""
+    interpret = resolve_interpret(interpret)
     m, k = a_hi.shape
     k2, n = b_hi.shape
     assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0

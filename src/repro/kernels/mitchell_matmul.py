@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax import Array
 from jax.experimental import pallas as pl
 
+from repro.core.platform import resolve_interpret
+
 
 def _clz_k(x: Array) -> Array:
     """Leading-one position (paper's LOD), branch-free, on int32 lanes."""
@@ -87,12 +89,14 @@ def mitchell_matmul_kernel(
     block_m: int = 16,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     """Raw kernel entry: a (M, K) int32 signed, b (K, N) int32 signed -> int32.
 
-    Shapes must be multiples of the block sizes (ops.py pads).
+    Shapes must be multiples of the block sizes (ops.py pads);
+    interpret=None autodetects the backend (DESIGN.md §7).
     """
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0

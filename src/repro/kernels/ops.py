@@ -37,7 +37,7 @@ def lns_matmul(
     block_m: int = 16,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     """Approximate float matmul via the Mitchell-family Pallas kernel.
 
@@ -65,7 +65,7 @@ def limb_matmul(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     """Exact wide-int matmul from 3 (karatsuba) or 4 (schoolbook) int8 passes."""
     da, sa = quantize_limbs(a, karatsuba=karatsuba)
@@ -94,7 +94,7 @@ def gaussian_filter(
     method: str = "refmlm",
     nbits: int = 8,
     block_rows: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     """3x3 Gaussian smoothing of a uint8 image with the selected multiplier.
 

@@ -1,0 +1,156 @@
+"""The three DESIGN.md §7 perf paths must be bit-identical to their
+reference paths for every multiplier method, approximate ones included:
+
+  * KCM product-table gather  == per-tap recursion (tables computed BY the
+    selected multiplier, so approximation error is preserved bit-exactly);
+  * digit-plane-flattened REFMLM == the paper-literal unrolled recursion;
+  * fused separable kernel == two-pass separable == direct (the latter for
+    exact multipliers, where the outer-product identity holds).
+
+Kernels run in interpret mode (CPU container; TPU is the target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kcm import METHODS, filter_tables, product_table, tap_multiplier
+from repro.core.refmlm import refmlm
+from repro.filters import FILTER_NAMES, apply_filter, get_filter
+from repro.filters.conv import conv2d_pass, fused_separable_pass
+from repro.filters.ref import apply_filter_ref
+
+METHODS_ALL = [*METHODS, "mitchell_ecc2"]
+SEPARABLE = [n for n in FILTER_NAMES if get_filter(n).separable]
+RNG = np.random.default_rng(7)
+BATCH = jnp.asarray(RNG.integers(0, 256, (2, 48, 40)), jnp.int32)
+
+
+class TestProductTables:
+    @pytest.mark.parametrize("method", METHODS_ALL)
+    @pytest.mark.parametrize("nbits", [2, 4, 8])
+    def test_table_equals_multiplier_everywhere(self, method, nbits):
+        """KCM ROM == the multiplier over the FULL operand range, for a
+        spread of coefficients incl. 0 and the width's maximum."""
+        mult = tap_multiplier(method)
+        xs = jnp.arange(1 << nbits, dtype=jnp.int32)
+        for coeff in sorted({0, 1, 3, (1 << nbits) - 1}):
+            tab = product_table(method, coeff, nbits)
+            want = np.asarray(mult(xs, jnp.full_like(xs, coeff), nbits))
+            np.testing.assert_array_equal(tab, want, err_msg=f"coeff={coeff}")
+
+    def test_negative_coefficient_bakes_sign(self):
+        np.testing.assert_array_equal(product_table("refmlm", -7, 8),
+                                      -product_table("refmlm", 7, 8))
+
+    def test_filter_tables_rows_are_row_major(self):
+        tabs = filter_tables("exact", np.array([[1, -2], [3, 4]]), 4)
+        assert tabs.shape == (4, 16)
+        np.testing.assert_array_equal(tabs[1], -2 * np.arange(16))
+        np.testing.assert_array_equal(tabs[2], 3 * np.arange(16))
+
+
+class TestKCMConv:
+    @pytest.mark.parametrize("method", METHODS_ALL)
+    def test_kcm_equals_recursion_direct(self, method):
+        """Gather path == recursion path on a filter with negative and zero
+        coefficients (the signed-magnitude contract's hard cases)."""
+        taps = get_filter("sharpen3").taps
+        kw = dict(method=method, nbits=8, shift=5, post="clip")
+        kcm = conv2d_pass(BATCH, taps, mult_impl="kcm", **kw)
+        rec = conv2d_pass(BATCH, taps, mult_impl="recurse", **kw)
+        np.testing.assert_array_equal(np.asarray(kcm), np.asarray(rec))
+
+    @pytest.mark.parametrize("method", METHODS_ALL)
+    def test_kcm_equals_recursion_signed_intermediate(self, method):
+        """Second-pass shape: signed input values through a wider table."""
+        inter = jnp.asarray(RNG.integers(-1020, 1021, (1, 16, 24)), jnp.int32)
+        col = np.array([[1], [2], [1]])
+        kw = dict(method=method, nbits=16, shift=0, post="none")
+        kcm = conv2d_pass(inter, col, mult_impl="kcm", **kw)
+        rec = conv2d_pass(inter, col, mult_impl="recurse", **kw)
+        np.testing.assert_array_equal(np.asarray(kcm), np.asarray(rec))
+
+    def test_auto_falls_back_under_jit(self):
+        """Traced taps: 'auto' must pick the recursion path and still agree
+        with the eager KCM result."""
+        taps = get_filter("gaussian3").taps
+        kw = dict(method="refmlm", nbits=8, shift=8, post="clip")
+        jitted = jax.jit(lambda x, t: conv2d_pass(x, t, **kw))
+        got = jitted(BATCH, jnp.asarray(taps))
+        want = conv2d_pass(BATCH, taps, **kw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_kcm_with_traced_taps_raises(self):
+        with pytest.raises(ValueError, match="kcm"):
+            jax.jit(lambda x, t: conv2d_pass(x, t, mult_impl="kcm"))(
+                BATCH, jnp.ones((3, 3), jnp.int32))
+
+    def test_unknown_mult_impl_raises(self):
+        with pytest.raises(ValueError, match="mult_impl"):
+            conv2d_pass(BATCH, get_filter("gaussian3").taps, mult_impl="rom")
+
+
+class TestFlattenedREFMLM:
+    @pytest.mark.parametrize("variant", ["kom4", "kom3"])
+    @pytest.mark.parametrize("base", ["efmlm", "mlm"])
+    @pytest.mark.parametrize("nbits", [4, 8])
+    def test_exhaustive_flat_equals_unrolled(self, variant, base, nbits):
+        n = 1 << nbits
+        a = jnp.arange(n, dtype=jnp.int32)[:, None]
+        b = jnp.arange(n, dtype=jnp.int32)[None, :]
+        flat = refmlm(a, b, nbits, variant=variant, base=base, flatten=True)
+        ref = refmlm(a, b, nbits, variant=variant, base=base, flatten=False)
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(ref))
+
+    @pytest.mark.parametrize("variant", ["kom4", "kom3"])
+    @pytest.mark.parametrize("base", ["efmlm", "mlm"])
+    def test_16bit_sampled_flat_equals_unrolled(self, variant, base):
+        a = jnp.asarray(RNG.integers(0, 1 << 16, 4096), jnp.int32)
+        b = jnp.asarray(RNG.integers(0, 1 << 16, 4096), jnp.int32)
+        flat = refmlm(a, b, 16, variant=variant, base=base, flatten=True)
+        ref = refmlm(a, b, 16, variant=variant, base=base, flatten=False)
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(ref))
+        if base == "efmlm":     # and still exact, per the paper's claim
+            true = (np.asarray(a, np.uint64) * np.asarray(b, np.uint64))
+            np.testing.assert_array_equal(np.asarray(flat, np.uint64), true)
+
+
+class TestFusedSeparable:
+    @pytest.mark.parametrize("name", SEPARABLE)
+    @pytest.mark.parametrize("method", METHODS_ALL)
+    def test_fused_equals_two_pass(self, name, method):
+        fused = apply_filter(BATCH, name, method=method, separable=True,
+                             fused=True)
+        two = apply_filter(BATCH, name, method=method, separable=True,
+                           fused=False)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(two))
+
+    @pytest.mark.parametrize("name", SEPARABLE)
+    def test_fused_equals_direct_for_exact(self, name):
+        """Outer-product taps + exact multiplier: all three dataflows agree."""
+        for method in ("exact", "refmlm"):
+            fused = apply_filter(BATCH, name, method=method, fused=True)
+            direct = apply_filter(BATCH, name, method=method, separable=False)
+            np.testing.assert_array_equal(np.asarray(fused), np.asarray(direct))
+
+    def test_fused_recurse_equals_fused_kcm(self):
+        kw = dict(method="refmlm", nbits=8, nbits2=16, shift=8, post="clip")
+        kcm = fused_separable_pass(BATCH, np.array([1, 4, 6, 4, 1]),
+                                   np.array([1, 4, 6, 4, 1]),
+                                   mult_impl="kcm", **kw)
+        rec = fused_separable_pass(BATCH, np.array([1, 4, 6, 4, 1]),
+                                   np.array([1, 4, 6, 4, 1]),
+                                   mult_impl="recurse", **kw)
+        np.testing.assert_array_equal(np.asarray(kcm), np.asarray(rec))
+
+    def test_fused_row_padding_nonmultiple(self):
+        """Band padding + halo + crop compose on a non-multiple height."""
+        imgs = jnp.asarray(RNG.integers(0, 256, (2, 50, 40)), jnp.int32)
+        got = apply_filter(imgs, "gaussian5", method="refmlm", fused=True)
+        want = apply_filter_ref(imgs, "gaussian5", method="refmlm")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fused_on_direct_filter_raises(self):
+        with pytest.raises(ValueError, match="separable"):
+            apply_filter(BATCH, "laplacian", fused=True)
