@@ -2,18 +2,27 @@
 only -- the TPU roofline terms for these kernels come from the dry-run).
 
 Reports us/call + achieved element-throughput for the three kernels across
-block-size variants (the BlockSpec tuning axis of §Perf), plus the batched
-filter-bank pipeline across filters x batch sizes and the three dataflow /
-tap-product trades of DESIGN.md §7:
+block-size variants, plus the batched filter-bank pipeline across filters x
+batch sizes and the before/after pairs of DESIGN.md §7/§8:
 
   * recursion-vs-KCM      -- per-tap KOM recursion vs constant-coefficient
                              product-table gather (the FPGA KCM analogue);
   * fused-vs-two-pass     -- one-kernel separable (VMEM halo band) vs two
                              kernels with an HBM int32 intermediate;
-  * separable-vs-direct   -- kh+kw vs kh*kw tap products per pixel.
+  * separable-vs-direct   -- kh+kw vs kh*kw tap products per pixel;
+  * fold-vs-serial-batch  -- batch folded into the parallel row-tile axis
+                             vs the serial leading batch axis (§8);
+  * scratch-vs-output     -- matmul K reduction carried in a VMEM scratch
+                             tile vs in-place output accumulation (§8).
 
-``--smoke`` runs the reduced-size regression guard used by scripts/check.sh:
-the KCM path must not be slower than the recursion path on the 5x5 Gaussian.
+Block shapes default through the per-backend autotune cache
+(`repro.tuning`); regenerate it with `python -m repro.tuning.autotune`
+before a bench run on a new platform.
+
+``--smoke`` runs the reduced-size regression guards used by
+scripts/check.sh: the KCM path must not lose to the recursion path, and
+batched throughput (n=8) must not fall below single-image throughput for
+any guarded bank filter.
 """
 from __future__ import annotations
 
@@ -25,6 +34,9 @@ import numpy as np
 from benchmarks.common import emit, time_fn, write_bench_json
 from repro.filters import apply_filter
 from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3, limb_matmul, lns_matmul
+
+#: bank filters under the batch-scaling smoke guard (n=8 must beat n=1).
+SCALING_GUARD_FILTERS = ("gaussian3", "gaussian5")
 
 
 def _img_batch(rng, batch: int, h: int = 128, w: int = 128):
@@ -56,15 +68,50 @@ def _bank_variants(imgs, *, tag: str):
     return out
 
 
+def _bank_scaling(rng, *, tag: str, h: int = 128, w: int = 128,
+                  filters=("gaussian3", "gaussian5", "sobel_x")):
+    """Filter-bank batch-scaling sweep (§8): autotuned grid per batch size,
+    plus the fold-vs-serial-batch before/after at n=8. Returns
+    filter -> {batch: mpix_s} for the smoke guard."""
+    mpix = {}
+    for filt in filters:
+        mpix[filt] = {}
+        for batch in (1, 4, 8):
+            imgs = _img_batch(rng, batch, h, w)
+            us = time_fn(lambda x: apply_filter(x, filt, method="refmlm"),
+                         imgs, iters=3)
+            mpix[filt][batch] = batch * h * w / us
+            emit(f"kernel_{tag}{filt}_n{batch}", us,
+                 f"mpix_s={mpix[filt][batch]:.2f}")
+        imgs = _img_batch(rng, 8, h, w)
+        us = time_fn(lambda x: apply_filter(x, filt, method="refmlm",
+                                            batch_fold=False), imgs, iters=3)
+        emit(f"kernel_{tag}{filt}_n8_nofold", us,
+             f"mpix_s={8*h*w/us:.2f}")
+        emit(f"kernel_{tag}{filt}_fold_speedup",
+             us / (8 * h * w / mpix[filt][8]), "x_vs_serial_batch_n8")
+        emit(f"kernel_{tag}{filt}_batch_scaling",
+             mpix[filt][8] / mpix[filt][1], "x_mpix_n8_vs_n1")
+    return mpix
+
+
 def main():
     rng = np.random.default_rng(0)
     lhs = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
     rhs = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
     flops = 2 * 128 * 256 * 256
 
+    matmul_us = {}
     for bm in (16, 32):
         us = time_fn(lambda x, y: lns_matmul(x, y, block_m=bm), lhs, rhs, iters=3)
+        matmul_us[f"lns_bm{bm}"] = us
         emit(f"kernel_lns_matmul_bm{bm}", us, f"gflops={flops/us/1e3:.3f}")
+    # §8 before/after: VMEM-scratch reduction carry vs in-place output.
+    us = time_fn(lambda x, y: lns_matmul(x, y, block_m=16, accum="output"),
+                 lhs, rhs, iters=3)
+    emit("kernel_lns_matmul_bm16_outacc", us, f"gflops={flops/us/1e3:.3f}")
+    emit("kernel_lns_matmul_scratch_speedup",
+         us / matmul_us["lns_bm16"], "x_vs_output_accum")
     for ecc in (1, 3):
         us = time_fn(lambda x, y: lns_matmul(x, y, num_ecc=ecc, case_split=False),
                      lhs, rhs, iters=3)
@@ -72,9 +119,17 @@ def main():
     for kar in (True, False):
         us = time_fn(lambda x, y: limb_matmul(x, y, karatsuba=kar), lhs, rhs,
                      iters=3)
+        matmul_us[f"limb_{kar}"] = us
         emit(f"kernel_limb_matmul_{'kom3' if kar else 'kom4'}", us,
              f"gflops={flops/us/1e3:.3f}")
+    us = time_fn(lambda x, y: limb_matmul(x, y, accum="output"), lhs, rhs,
+                 iters=3)
+    emit("kernel_limb_matmul_kom3_outacc", us, f"gflops={flops/us/1e3:.3f}")
+    emit("kernel_limb_matmul_scratch_speedup",
+         us / matmul_us["limb_True"], "x_vs_output_accum")
 
+    # legacy single-image shim: must ride the KCM fast path (auto), not the
+    # per-tap recursion its old jit-traced taps forced (§8 satellite fix).
     img = jnp.asarray(rng.integers(0, 256, (256, 256)), jnp.int32)
     kern = jnp.asarray(gaussian_kernel_3x3())
     for meth in ("exact", "refmlm", "mitchell"):
@@ -82,15 +137,9 @@ def main():
                      iters=3)
         emit(f"kernel_gauss_{meth}", us, f"mpix_s={256*256/us:.2f}")
 
-    # filter-bank pipeline: filters x batch sizes (one compiled kernel per
-    # config; the batch rides the leading grid axis).
-    for filt in ("gaussian3", "gaussian5", "sobel_x"):
-        for batch in (1, 4, 8):
-            imgs = _img_batch(rng, batch)
-            us = time_fn(lambda x: apply_filter(x, filt, method="refmlm"),
-                         imgs, iters=3)
-            emit(f"kernel_bank_{filt}_n{batch}", us,
-                 f"mpix_s={batch*128*128/us:.2f}")
+    # filter-bank pipeline: filters x batch sizes on the autotuned grid,
+    # with the fold-vs-serial-batch §8 before/after.
+    _bank_scaling(rng, tag="bank_")
 
     imgs = _img_batch(rng, 4)
     # separable (k+k taps) vs direct (k*k taps) on the 5x5 Gaussian.
@@ -104,17 +153,31 @@ def main():
 
 
 def smoke(threshold: float = 1.0) -> int:
-    """Reduced-size perf regression guard (scripts/check.sh): fail when the
-    KCM path is slower than the recursion path on the 5x5 Gaussian. The
-    generous 1.0x threshold only catches the fast path *losing*, not noise."""
+    """Reduced-size perf regression guards (scripts/check.sh).
+
+    Fails when (a) the KCM path is slower than the recursion path on the
+    5x5 Gaussian, or (b) n=8 batched throughput (mpix/s) falls below n=1
+    for any guarded bank filter -- the §8 batch-scaling guarantee. The
+    generous 1.0x thresholds only catch a fast path *losing*, not noise."""
     rng = np.random.default_rng(0)
     out = _bank_variants(_img_batch(rng, 2, 64, 64), tag="smoke_")
+    rc = 0
     speedup = out["recurse"] / out["kcm"]
     print(f"# smoke: kcm {speedup:.2f}x vs recursion (threshold {threshold}x)")
     if speedup < threshold:
         print("# FAIL: KCM fast path is slower than the recursion path")
-        return 1
-    return 0
+        rc = 1
+    mpix = _bank_scaling(rng, tag="smoke_", h=64, w=64,
+                         filters=SCALING_GUARD_FILTERS)
+    for filt in SCALING_GUARD_FILTERS:
+        scaling = mpix[filt][8] / mpix[filt][1]
+        print(f"# smoke: {filt} n8 scales {scaling:.2f}x vs n1 "
+              f"(threshold {threshold}x)")
+        if scaling < threshold:
+            print(f"# FAIL: batching regresses {filt} throughput "
+                  f"(n8 {mpix[filt][8]:.2f} < n1 {mpix[filt][1]:.2f} mpix/s)")
+            rc = 1
+    return rc
 
 
 if __name__ == "__main__":

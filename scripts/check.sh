@@ -5,9 +5,11 @@
 #   scripts/check.sh --lint     doc-link lint only (fast)
 #
 # The perf smoke runs benchmarks/kernel_bench.py --smoke on a reduced size
-# and fails if the KCM constant-coefficient path is slower than the per-tap
-# recursion path on the 5x5 Gaussian (DESIGN.md §7 regression guard,
-# generous 1.0x threshold so only a real inversion trips it).
+# and fails if (a) the KCM constant-coefficient path is slower than the
+# per-tap recursion path on the 5x5 Gaussian (DESIGN.md §7 guard) or
+# (b) n=8 batched throughput falls below n=1 for any guarded bank filter
+# (the DESIGN.md §8 batch-scaling guard). Generous 1.0x thresholds so only
+# a real inversion trips them.
 #
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's

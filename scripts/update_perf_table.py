@@ -4,9 +4,10 @@
     PYTHONPATH=src python -m benchmarks.run        # writes BENCH_kernels.json
     python scripts/update_perf_table.py            # splices the README table
 
-The table is the curated DESIGN.md §7 before/after story (recursion vs KCM,
-two-pass vs fused, separable vs direct); the full row set stays in the JSON
-artifact. Content between the BENCH_TABLE markers is owned by this script.
+The table is the curated DESIGN.md §7/§8 before/after story (recursion vs
+KCM, two-pass vs fused, separable vs direct, serial batch axis vs
+batch-folded parallel grid); the full row set stays in the JSON artifact.
+Content between the BENCH_TABLE markers is owned by this script.
 """
 from __future__ import annotations
 
@@ -30,10 +31,16 @@ ROWS = [
      "5×5 Gaussian, refmlm, separable, **fused kernel** (VMEM halo band)"),
     ("kernel_bank_gaussian5_direct", "5×5 Gaussian, refmlm, direct (kh·kw taps)"),
     ("kernel_bank_gaussian5_sep", "5×5 Gaussian, refmlm, separable (kh+kw taps)"),
+    ("kernel_bank_gaussian3_n8_nofold",
+     "3×3 Gaussian, refmlm, batch n=8, serial batch axis"),
+    ("kernel_bank_gaussian3_n8",
+     "3×3 Gaussian, refmlm, batch n=8, **batch-folded parallel grid** (§8)"),
 ]
 SPEEDUPS = [
     ("kernel_bank_gaussian5_kcm_speedup", "KCM vs recursion"),
     ("kernel_bank_gaussian5_fused_speedup", "fused vs two-pass"),
+    ("kernel_bank_gaussian3_fold_speedup", "batch fold vs serial batch (n=8)"),
+    ("kernel_bank_gaussian3_batch_scaling", "n=8 vs n=1 throughput"),
 ]
 
 

@@ -72,14 +72,32 @@ def product_table(method: str, coeff: int, nbits: int) -> np.ndarray:
     return (int(np.sign(coeff)) * tab).astype(np.int32)
 
 
-def filter_tables(method: str, taps, nbits: int) -> np.ndarray:
+def filter_tables(method: str, taps, nbits: int, *,
+                  narrow: bool = True) -> np.ndarray:
     """Stacked per-tap KCM ROMs for a coefficient table.
 
     `taps` -- any integer array of trace-time-constant coefficients; returns
-    (taps.size, 2**nbits) int32, rows in C (row-major tap) order.
+    (taps.size, 2**nbits), rows in C (row-major tap) order. With `narrow`
+    (the default) the stack is stored at the narrowest width holding every
+    product -- int16 when all |products| < 2**15 -- halving the VMEM
+    footprint of the tile-resident ROMs; the conv kernel widens on
+    accumulation only when the bound analysis requires it (DESIGN.md §8).
     """
     flat = np.asarray(taps, dtype=np.int64).reshape(-1)
-    return np.stack([product_table(method, int(c), nbits) for c in flat])
+    stack = np.stack([product_table(method, int(c), nbits) for c in flat])
+    if narrow and np.abs(stack).max(initial=0) < (1 << 15):
+        return stack.astype(np.int16)
+    return stack
 
 
-__all__ = ["METHODS", "filter_tables", "product_table", "tap_multiplier"]
+def tables_acc_bound(tables: np.ndarray) -> int:
+    """Worst-case |accumulator| of a CSA tree fed by these ROMs: the sum of
+    each tap's largest |product|. Exact (the tables ARE the realized
+    products, approximation error included), so it sizes the narrowest safe
+    accumulator width for the direct path the same way `second_pass_nbits`
+    sizes the separable second pass (DESIGN.md §8)."""
+    return int(np.abs(np.asarray(tables, np.int64)).max(axis=-1).sum())
+
+
+__all__ = ["METHODS", "filter_tables", "product_table", "tables_acc_bound",
+           "tap_multiplier"]

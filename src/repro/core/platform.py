@@ -1,10 +1,18 @@
-"""Backend detection for the Pallas kernels (DESIGN.md §7).
+"""Backend detection + per-backend compiler parameters for the Pallas
+kernels (DESIGN.md §7, §8).
 
 Every kernel wrapper takes `interpret: bool | None`. `None` means
 autodetect: compile for real on a TPU backend, fall back to the Pallas
 interpreter elsewhere (the CPU containers this repo's tests run in). An
 explicit True/False always wins -- interpret=True on TPU remains the
 debugging escape hatch the Pallas guide recommends.
+
+`grid_compiler_params` is the per-backend spelling of grid parallelism:
+on a compiled TPU backend it returns `TPUCompilerParams` with the given
+`dimension_semantics` tuple so independent grid axes actually parallelize
+across megacores; under the interpreter (which executes the grid serially
+and ignores Mosaic parameters) it returns None and the `pallas_call` is
+issued without compiler params.
 """
 from __future__ import annotations
 
@@ -21,4 +29,16 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
-__all__ = ["default_interpret", "resolve_interpret"]
+def grid_compiler_params(semantics: tuple[str, ...], interpret: bool):
+    """dimension_semantics -> pallas_call compiler_params, gated per backend.
+
+    `semantics` is one entry per grid axis, each 'parallel' or 'arbitrary'
+    (reductions carried across grid steps must stay 'arbitrary').
+    """
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu  # deferred: TPU-only path
+    return pltpu.TPUCompilerParams(dimension_semantics=tuple(semantics))
+
+
+__all__ = ["default_interpret", "grid_compiler_params", "resolve_interpret"]

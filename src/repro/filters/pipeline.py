@@ -6,9 +6,10 @@
 
 Accepts a single (H, W) image or an (N, H, W) batch (NHWC with a trailing
 unit channel axis is also accepted and squeezed -- the datapath is
-grayscale, like the paper's fingerprint experiment). Row padding to the
-Pallas band size and the direct-vs-separable dataflow choice are handled
-here so the kernel stays shape-regular.
+grayscale, like the paper's fingerprint experiment). The direct-vs-separable
+dataflow choice is handled here; tile padding and the grid organization
+(row bands x column tiles, batch fold) live in the conv passes, defaulted
+from the per-backend autotune cache (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -25,7 +26,6 @@ from repro.filters.bank import (
     max_intermediate,
 )
 from repro.filters.conv import (
-    choose_block_rows,
     conv2d_pass,
     fused_separable_pass,
     second_pass_nbits,
@@ -56,33 +56,33 @@ def _restore(out: Array, orig: tuple[int, ...]) -> Array:
 
 def _apply(imgs: Array, spec: FilterSpec, method: str, nbits: int,
            separable: bool, fused: bool, mult_impl: str,
-           block_rows: int | None, interpret: bool | None) -> Array:
-    n, h, w = imgs.shape
-    br = choose_block_rows(h) if block_rows is None else block_rows
-    padded = jnp.pad(imgs, ((0, 0), (0, (-h) % br), (0, 0)))
+           block_rows: int | None, block_cols: int | None,
+           batch_fold: bool | None, interpret: bool | None) -> Array:
+    blocks = dict(block_rows=block_rows, block_cols=block_cols,
+                  batch_fold=batch_fold)
     if separable:
         nb2 = second_pass_nbits(max_intermediate(spec),
                                 int(np.abs(spec.sep_col).max()))
         if fused:
             out = fused_separable_pass(
-                padded, spec.sep_row, spec.sep_col, method=method,
+                imgs, spec.sep_row, spec.sep_col, method=method,
                 nbits=nbits, nbits2=nb2, shift=spec.shift, post=spec.post,
-                block_rows=br, interpret=interpret, mult_impl=mult_impl)
+                interpret=interpret, mult_impl=mult_impl, **blocks)
         else:
-            run = partial(conv2d_pass, block_rows=br, interpret=interpret,
-                          mult_impl=mult_impl)
+            run = partial(conv2d_pass, interpret=interpret,
+                          mult_impl=mult_impl, **blocks)
             row = jnp.asarray(spec.sep_row, jnp.int32)[None, :]  # (1, kw)
             col = jnp.asarray(spec.sep_col, jnp.int32)[:, None]  # (kh, 1)
-            tmp = run(padded, row, method=method, nbits=nbits, shift=0,
+            tmp = run(imgs, row, method=method, nbits=nbits, shift=0,
                       post="none")
             out = run(tmp, col, method=method, nbits=nb2, shift=spec.shift,
                       post=spec.post)
     else:
-        out = conv2d_pass(padded, jnp.asarray(spec.taps, jnp.int32),
+        out = conv2d_pass(imgs, jnp.asarray(spec.taps, jnp.int32),
                           method=method, nbits=nbits, shift=spec.shift,
-                          post=spec.post, block_rows=br, interpret=interpret,
-                          mult_impl=mult_impl)
-    return out[:, :h].astype(jnp.uint8)
+                          post=spec.post, interpret=interpret,
+                          mult_impl=mult_impl, **blocks)
+    return out.astype(jnp.uint8)
 
 
 def apply_filter(
@@ -95,6 +95,8 @@ def apply_filter(
     fused: bool | None = None,
     mult_impl: str = "auto",
     block_rows: int | None = None,
+    block_cols: int | None = None,
+    batch_fold: bool | None = None,
     interpret: bool | None = None,
 ) -> Array:
     """Run one bank filter over an image batch through the selected multiplier.
@@ -106,7 +108,10 @@ def apply_filter(
     the two-kernel dataflow with its HBM intermediate (the before/after
     benchmark axis). mult_impl picks the tap-product implementation
     ('recurse' | 'kcm' | 'auto', see repro.filters.conv); interpret=None
-    autodetects the backend.
+    autodetects the backend. The grid organization (block_rows, block_cols,
+    batch_fold) defaults through the per-backend autotune cache -- outputs
+    are bit-identical across every organization (DESIGN.md §8, asserted in
+    tests), so these are pure throughput knobs.
     """
     spec = get_filter(filt) if isinstance(filt, str) else filt
     if separable is None:
@@ -119,7 +124,7 @@ def apply_filter(
         raise ValueError("fused=True requires the separable dataflow")
     arr, orig = _normalize(imgs)
     out = _apply(arr, spec, method, nbits, separable, fused, mult_impl,
-                 block_rows, interpret)
+                 block_rows, block_cols, batch_fold, interpret)
     return _restore(out, orig)
 
 

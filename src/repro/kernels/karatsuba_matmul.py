@@ -16,6 +16,13 @@ Tiling: classic (M/bm, N/bn, K/bk) grid; all limb blocks in VMEM. MXU dims
 default to 128-multiples. On TPU the limb dtypes would be int8 (4x VMEM
 savings); interpret-mode CPU carries them as int32 with int8 values, which
 is numerically identical.
+
+Grid semantics (DESIGN.md §8): M and N are `parallel` output-tile axes, K
+is the carried reduction (`arbitrary`). The three partial-product
+accumulators carry in VMEM scratch tiles (init at k==0, flush at the last
+k step; `accum='scratch'`, the default); `accum='output'` keeps the legacy
+in-place output accumulation as the benchmark baseline. Bit-identical
+either way.
 """
 from __future__ import annotations
 
@@ -25,17 +32,14 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.platform import resolve_interpret
+from repro.core.platform import grid_compiler_params, resolve_interpret
+
+ACCUM_MODES = ("scratch", "output")
 
 
-def _kernel(ah_ref, al_ref, bh_ref, bl_ref, hh_ref, mid_ref, ll_ref, *, karatsuba: bool):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        hh_ref[...] = jnp.zeros_like(hh_ref)
-        mid_ref[...] = jnp.zeros_like(mid_ref)
-        ll_ref[...] = jnp.zeros_like(ll_ref)
-
+def _block_products(ah_ref, al_ref, bh_ref, bl_ref, *, karatsuba: bool):
     ah, al = ah_ref[...], al_ref[...]
     bh, bl = bh_ref[...], bl_ref[...]
     dot = functools.partial(jnp.matmul, preferred_element_type=jnp.int32)
@@ -46,6 +50,40 @@ def _kernel(ah_ref, al_ref, bh_ref, bl_ref, hh_ref, mid_ref, ll_ref, *, karatsub
         mid = dot(ah + al, bh + bl) - hh - ll
     else:
         mid = dot(ah, bl) + dot(al, bh)
+    return hh, mid, ll
+
+
+def _kernel_scratch(ah_ref, al_ref, bh_ref, bl_ref, hh_ref, mid_ref, ll_ref,
+                    hh_acc, mid_acc, ll_acc, *, karatsuba: bool):
+    accs = (hh_acc, mid_acc, ll_acc)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        for acc in accs:
+            acc[...] = jnp.zeros_like(acc)
+
+    hh, mid, ll = _block_products(ah_ref, al_ref, bh_ref, bl_ref,
+                                  karatsuba=karatsuba)
+    hh_acc[...] += hh
+    mid_acc[...] += mid
+    ll_acc[...] += ll
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        for out, acc in zip((hh_ref, mid_ref, ll_ref), accs):
+            out[...] = acc[...]
+
+
+def _kernel_output(ah_ref, al_ref, bh_ref, bl_ref, hh_ref, mid_ref, ll_ref,
+                   *, karatsuba: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        hh_ref[...] = jnp.zeros_like(hh_ref)
+        mid_ref[...] = jnp.zeros_like(mid_ref)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    hh, mid, ll = _block_products(ah_ref, al_ref, bh_ref, bl_ref,
+                                  karatsuba=karatsuba)
     hh_ref[...] += hh
     mid_ref[...] += mid
     ll_ref[...] += ll
@@ -61,10 +99,14 @@ def karatsuba_matmul_kernel(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    accum: str = "scratch",
     interpret: bool | None = None,
 ) -> tuple[Array, Array, Array]:
     """Raw kernel entry over pre-decomposed limbs; returns (hh, mid, ll).
-    interpret=None autodetects the backend (DESIGN.md §7)."""
+    interpret=None autodetects the backend (DESIGN.md §7); `accum` picks
+    VMEM-scratch vs legacy in-place output accumulation (DESIGN.md §8)."""
+    if accum not in ACCUM_MODES:
+        raise ValueError(f"accum must be one of {ACCUM_MODES}, got {accum!r}")
     interpret = resolve_interpret(interpret)
     m, k = a_hi.shape
     k2, n = b_hi.shape
@@ -74,12 +116,19 @@ def karatsuba_matmul_kernel(
     a_spec = pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk))
     b_spec = pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j))
     o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
+    scratch = accum == "scratch"
+    kernel = functools.partial(
+        _kernel_scratch if scratch else _kernel_output, karatsuba=karatsuba)
     return pl.pallas_call(
-        functools.partial(_kernel, karatsuba=karatsuba),
+        kernel,
         out_shape=(acc, acc, acc),
         grid=grid,
         in_specs=[a_spec, a_spec, b_spec, b_spec],
         out_specs=(o_spec, o_spec, o_spec),
+        scratch_shapes=(
+            [pltpu.VMEM((block_m, block_n), jnp.int32)] * 3 if scratch else []),
+        compiler_params=grid_compiler_params(
+            ("parallel", "parallel", "arbitrary"), interpret),
         interpret=interpret,
     )(
         a_hi.astype(jnp.int32),

@@ -12,6 +12,15 @@ in VMEM; the (bm, bk, bn) broadcast product is the dominant VMEM term
 (exact; products < 2^(2*nbits), nbits <= 10), so the kernel is bit-identical
 to the pure-jnp oracle in ref.py.
 
+Grid semantics (DESIGN.md §8): the M and N axes are declared `parallel`
+(independent output tiles, distributable across megacores); K is the
+carried reduction and stays `arbitrary`. The partial sums accumulate in a
+VMEM scratch tile -- zero-initialized at k==0, flushed to the output block
+at the last k step (`accum='scratch'`, the default) -- so the output ref is
+written once instead of read-modify-written every K step;
+`accum='output'` keeps the legacy in-place accumulation as the benchmark
+baseline. Both orderings produce bit-identical int32 sums.
+
 Inputs are pre-quantized signed integer magnitudes (see ops.py); the kernel
 is pure integer arithmetic, like the paper's RTL.
 """
@@ -23,8 +32,11 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.platform import resolve_interpret
+from repro.core.platform import grid_compiler_params, resolve_interpret
+
+ACCUM_MODES = ("scratch", "output")
 
 
 def _clz_k(x: Array) -> Array:
@@ -70,7 +82,22 @@ def _signed_block_product(a: Array, b: Array, *, num_ecc: int, case_split: bool)
     return jnp.sum(total * sgn, axis=1)
 
 
-def _kernel(a_ref, b_ref, o_ref, *, num_ecc: int, case_split: bool):
+def _kernel_scratch(a_ref, b_ref, o_ref, acc_ref, *, num_ecc: int,
+                    case_split: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _signed_block_product(
+        a_ref[...], b_ref[...], num_ecc=num_ecc, case_split=case_split
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _kernel_output(a_ref, b_ref, o_ref, *, num_ecc: int, case_split: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -89,20 +116,30 @@ def mitchell_matmul_kernel(
     block_m: int = 16,
     block_n: int = 128,
     block_k: int = 128,
+    accum: str = "scratch",
     interpret: bool | None = None,
 ) -> Array:
     """Raw kernel entry: a (M, K) int32 signed, b (K, N) int32 signed -> int32.
 
     Shapes must be multiples of the block sizes (ops.py pads);
-    interpret=None autodetects the backend (DESIGN.md §7).
+    interpret=None autodetects the backend (DESIGN.md §7). `accum` picks the
+    K-reduction carry: a VMEM scratch tile with init/flush ('scratch', the
+    default) or legacy in-place output accumulation ('output') -- module
+    docstring, DESIGN.md §8.
     """
+    if accum not in ACCUM_MODES:
+        raise ValueError(f"accum must be one of {ACCUM_MODES}, got {accum!r}")
     interpret = resolve_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0
     grid = (m // block_m, n // block_n, k // block_k)
+    scratch = accum == "scratch"
+    kernel = functools.partial(
+        _kernel_scratch if scratch else _kernel_output,
+        num_ecc=num_ecc, case_split=case_split)
     return pl.pallas_call(
-        functools.partial(_kernel, num_ecc=num_ecc, case_split=case_split),
+        kernel,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         grid=grid,
         in_specs=[
@@ -110,5 +147,9 @@ def mitchell_matmul_kernel(
             pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        scratch_shapes=(
+            [pltpu.VMEM((block_m, block_n), jnp.int32)] if scratch else []),
+        compiler_params=grid_compiler_params(
+            ("parallel", "parallel", "arbitrary"), interpret),
         interpret=interpret,
     )(a.astype(jnp.int32), b.astype(jnp.int32))

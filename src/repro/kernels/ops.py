@@ -26,7 +26,7 @@ def _pad_to(x: Array, mult0: int, mult1: int) -> Array:
 
 
 @partial(jax.jit, static_argnames=("num_ecc", "case_split", "nbits", "block_m",
-                                   "block_n", "block_k", "interpret"))
+                                   "block_n", "block_k", "accum", "interpret"))
 def lns_matmul(
     a: Array,
     b: Array,
@@ -37,12 +37,15 @@ def lns_matmul(
     block_m: int = 16,
     block_n: int = 128,
     block_k: int = 128,
+    accum: str = "scratch",
     interpret: bool | None = None,
 ) -> Array:
     """Approximate float matmul via the Mitchell-family Pallas kernel.
 
     a (M, K) x b (K, N) -> f32 (M, N). num_ecc=0/case_split=True is Mitchell's
     algorithm; case_split=False with k ECCs is the Babic iterative multiplier.
+    `accum` picks the K-reduction carry (VMEM scratch vs in-place output,
+    DESIGN.md §8) -- bit-identical, benchmark axis only.
     """
     qa = quantize_magnitude(a, nbits)
     qb = quantize_magnitude(b, nbits)
@@ -50,13 +53,14 @@ def lns_matmul(
     sb = _pad_to(qb.magnitude * qb.sign, block_k, block_n)
     acc = mitchell_matmul_kernel(
         sa, sb, num_ecc=num_ecc, case_split=case_split,
-        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+        block_m=block_m, block_n=block_n, block_k=block_k, accum=accum,
+        interpret=interpret,
     )[: a.shape[0], : b.shape[1]]
     return acc.astype(jnp.float32) * (qa.scale * qb.scale)
 
 
 @partial(jax.jit, static_argnames=("karatsuba", "block_m", "block_n", "block_k",
-                                   "interpret"))
+                                   "accum", "interpret"))
 def limb_matmul(
     a: Array,
     b: Array,
@@ -65,9 +69,14 @@ def limb_matmul(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    accum: str = "scratch",
     interpret: bool | None = None,
 ) -> Array:
-    """Exact wide-int matmul from 3 (karatsuba) or 4 (schoolbook) int8 passes."""
+    """Exact wide-int matmul from 3 (karatsuba) or 4 (schoolbook) int8 passes.
+
+    `accum` picks the K-reduction carry (VMEM scratch vs in-place output,
+    DESIGN.md §8) -- bit-identical, benchmark axis only.
+    """
     da, sa = quantize_limbs(a, karatsuba=karatsuba)
     db, sb = quantize_limbs(b, karatsuba=karatsuba)
     w = da.limb_bits
@@ -77,7 +86,8 @@ def limb_matmul(
     bl = _pad_to(db.lo, block_k, block_n)
     hh, mid, ll = karatsuba_matmul_kernel(
         ah, al, bh, bl, karatsuba=karatsuba,
-        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+        block_m=block_m, block_n=block_n, block_k=block_k, accum=accum,
+        interpret=interpret,
     )
     m, n = a.shape[0], b.shape[1]
     acc = (hh[:m, :n].astype(jnp.float32) * float(1 << (2 * w))
@@ -86,15 +96,15 @@ def limb_matmul(
     return acc * (sa * sb)
 
 
-@partial(jax.jit, static_argnames=("method", "nbits", "block_rows", "interpret"))
 def gaussian_filter(
     img: Array,
     kernel: Array,
     *,
     method: str = "refmlm",
     nbits: int = 8,
-    block_rows: int = 32,
+    block_rows: int | None = None,
     interpret: bool | None = None,
+    mult_impl: str = "auto",
 ) -> Array:
     """3x3 Gaussian smoothing of a uint8 image with the selected multiplier.
 
@@ -102,15 +112,18 @@ def gaussian_filter(
     filter bank -- Gaussian 3x3/5x5, box, sharpen, Sobel, Laplacian, direct
     or separable -- is `apply_filter` / `filter_bank_apply` from
     repro.filters (re-exported here; DESIGN.md §5).
+
+    Deliberately NOT wrapped in an outer `jax.jit`: tracing would turn the
+    coefficient table into a Tracer and force `mult_impl='auto'` down the
+    per-tap recursion path (DESIGN.md §7). Eager taps keep the KCM
+    constant-coefficient fast path, and the conv pass jits internally;
+    a caller's own jit still composes (degrading to the recursion path).
     """
-    h = img.shape[0]
-    pad = (-h) % block_rows
-    padded = jnp.pad(img.astype(jnp.int32), ((0, pad), (0, 0)))
     out = gaussian_conv3x3_kernel(
-        padded, kernel, method=method, nbits=nbits,
-        block_rows=block_rows, interpret=interpret,
+        img.astype(jnp.int32), kernel, method=method, nbits=nbits,
+        block_rows=block_rows, interpret=interpret, mult_impl=mult_impl,
     )
-    return out[:h].astype(jnp.uint8)
+    return out.astype(jnp.uint8)
 
 
 __all__ = ["lns_matmul", "limb_matmul", "gaussian_filter", "gaussian_kernel_3x3",

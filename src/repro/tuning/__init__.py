@@ -1,0 +1,36 @@
+"""Block-shape autotuning for the conv grid (DESIGN.md §8).
+
+Layers:
+  blocks.py   -- `BlockConfig` + the cache-miss heuristic (`default_blocks`);
+  cache.py    -- the committable per-backend JSON cache and the single
+                 lookup path (`resolve_blocks`: explicit > cached > heuristic);
+  autotune.py -- the sweeping tuner that populates the cache
+                 (`python -m repro.tuning.autotune`).
+"""
+from repro.tuning.blocks import (
+    BlockConfig,
+    choose_block_rows,
+    default_blocks,
+)
+from repro.tuning.cache import (
+    backend_key,
+    cache_path,
+    config_key,
+    invalidate_cache,
+    load_cache,
+    resolve_blocks,
+    store_cache,
+)
+
+__all__ = [
+    "BlockConfig",
+    "backend_key",
+    "cache_path",
+    "choose_block_rows",
+    "config_key",
+    "default_blocks",
+    "invalidate_cache",
+    "load_cache",
+    "resolve_blocks",
+    "store_cache",
+]

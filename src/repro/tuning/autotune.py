@@ -1,0 +1,164 @@
+"""Block-shape autotuner: sweep candidate (block_rows, block_cols,
+batch_fold) grid organizations per (image shape, dataflow, mult_impl) and
+persist the winners to the per-backend cache (DESIGN.md §8).
+
+    PYTHONPATH=src python -m repro.tuning.autotune            # bench shapes
+    PYTHONPATH=src python -m repro.tuning.autotune --quick    # smoke shapes
+
+The default sweep covers the shapes the kernel benchmarks and the smoke
+guard exercise (128x128 batches at n=1/4/8, 64x64 at n=2/8) for the 3x3 and
+5x5 filter extents in the direct and fused dataflows. The written JSON is
+committable: regenerate after kernel changes, commit the diff, and every
+default `apply_filter`/`conv2d_pass` call on that backend picks the
+measured winners up (explicit block shapes always override --
+`repro.tuning.cache.resolve_blocks`).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Iterable, Iterator
+
+import jax
+import numpy as np
+
+from repro.tuning.blocks import (
+    MAX_BLOCK_ROWS,
+    BlockConfig,
+    choose_block_rows,
+    default_blocks,
+    round_up,
+)
+from repro.tuning.cache import backend_key, config_key, store_cache
+
+#: (kind, n, h, w, kh, kw, mult_impl) rows of the default sweep.
+DEFAULT_SWEEP: tuple[tuple, ...] = tuple(
+    (kind, n, h, w, k, k, "kcm")
+    for kind in ("direct", "fused")
+    for (n, h, w) in ((1, 128, 128), (4, 128, 128), (8, 128, 128),
+                      (2, 64, 64), (8, 64, 64))
+    for k in (3, 5)
+)
+QUICK_SWEEP: tuple[tuple, ...] = tuple(
+    (kind, n, 64, 64, 3, 3, "kcm")
+    for kind in ("direct", "fused") for n in (1, 8)
+)
+
+
+def candidate_blocks(kind: str, n: int, h: int, w: int, kh: int,
+                     kw: int) -> Iterator[BlockConfig]:
+    """Valid candidate grid organizations for one shape, deduplicated.
+
+    Row bands: the divisor candidates of the unfolded height, plus -- when
+    folding -- single-band and few-band cuts of the folded tall height.
+    Column tiles: full width, plus halvings down to 128 on images wide
+    enough for a full-width band to be an oversized tile (narrower images
+    are covered by the tiling-invariance tests, not the sweep).
+    """
+    ph, pw = kh // 2, kw // 2
+    folds = (False,) if n == 1 else (False, True)
+    seen = set()
+    for fold in folds:
+        tall = n * (h + 2 * ph) if fold else h
+        rows = {choose_block_rows(h), 32, 64, 128}
+        if fold:
+            for steps in (1, 2, 4):
+                if -(-tall // steps) <= MAX_BLOCK_ROWS * 2:
+                    rows.add(round_up(-(-tall // steps), 8))
+        cols: set[int | None] = {None}
+        bc = w
+        while w > 256 and bc // 2 >= max(2 * pw, 128):
+            bc //= 2
+            cols.add(bc)
+        for br in sorted(rows):
+            if br < max(2 * ph, 8) or br > 2 * MAX_BLOCK_ROWS:
+                continue
+            for col in sorted(cols, key=lambda c: -1 if c is None else c):
+                cfg = BlockConfig(br, col, fold)
+                if cfg not in seen:
+                    seen.add(cfg)
+                    yield cfg
+
+
+def _time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def measure(kind: str, cfg: BlockConfig, n: int, h: int, w: int, kh: int,
+            kw: int, mult_impl: str, *, iters: int = 3) -> float:
+    """Median us/call of one dataflow under one grid organization."""
+    # Lazy import: repro.filters.conv imports this package for its defaults.
+    from repro.filters.conv import conv2d_pass, fused_separable_pass
+
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.integers(0, 256, (n, h, w)), jnp.int32)
+    taps1d = np.array([1, 4, 6, 4, 1] if kh == 5 else [4, 8, 4], np.int64)
+    kw_common = dict(method="refmlm", mult_impl=mult_impl,
+                     block_rows=cfg.block_rows,
+                     block_cols=w if cfg.block_cols is None else cfg.block_cols,
+                     batch_fold=cfg.batch_fold)
+    if kind == "fused":
+        fn = lambda x: fused_separable_pass(x, taps1d, taps1d, nbits=8,
+                                            nbits2=16, shift=8, post="clip",
+                                            **kw_common)
+    else:
+        taps = np.outer(taps1d, taps1d)
+        fn = lambda x: conv2d_pass(x, taps, nbits=8, shift=8, post="clip",
+                                   **kw_common)
+    return _time_us(fn, imgs, iters=iters)
+
+
+def tune(sweep: Iterable[tuple] = DEFAULT_SWEEP, *, iters: int = 3,
+         verbose: bool = True) -> dict:
+    """Sweep every (shape, dataflow) row and return the winning configs
+    as a `store_cache`-ready mapping."""
+    configs: dict[str, dict] = {}
+    for kind, n, h, w, kh, kw, impl in sweep:
+        best: tuple[float, BlockConfig] | None = None
+        for cfg in candidate_blocks(kind, n, h, w, kh, kw):
+            us = measure(kind, cfg, n, h, w, kh, kw, impl, iters=iters)
+            if verbose:
+                print(f"# tune {kind} n{n}x{h}x{w} k{kh}x{kw} {impl} "
+                      f"br={cfg.block_rows} bc={cfg.block_cols} "
+                      f"fold={cfg.batch_fold}: {us:.1f}us")
+            if best is None or us < best[0]:
+                best = (us, cfg)
+        assert best is not None
+        us, cfg = best
+        key = config_key(kind, n, h, w, kh, kw, impl)
+        configs[key] = {**cfg.as_dict(), "us_per_call": round(us, 1)}
+        # A fold winner that loses to the heuristic default would mean the
+        # heuristic is strictly better -- still record the measurement.
+        if verbose:
+            d = default_blocks(kind, n, h, w, kh, kw)
+            print(f"# tune {key}: winner br={cfg.block_rows} "
+                  f"bc={cfg.block_cols} fold={cfg.batch_fold} ({us:.1f}us; "
+                  f"heuristic was br={d.block_rows} bc={d.block_cols} "
+                  f"fold={d.batch_fold})")
+    return configs
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep (smoke shapes only)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    sweep = QUICK_SWEEP if args.quick else DEFAULT_SWEEP
+    configs = tune(sweep, iters=args.iters)
+    path = store_cache(configs)
+    print(f"# wrote {path} ({len(configs)} configs, backend={backend_key()})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

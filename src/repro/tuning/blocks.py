@@ -1,0 +1,85 @@
+"""Block-shape vocabulary and heuristic defaults for the conv grid
+(DESIGN.md §8).
+
+A `BlockConfig` names one point of the throughput-first grid organization of
+`repro.filters.conv`:
+
+  * `block_rows`  -- height of one output row band (the VMEM tile depth);
+  * `block_cols`  -- width of one output column tile, or None for the full
+                     image width (no column tiling);
+  * `batch_fold`  -- fold the batch into the row axis: each image is given
+                     its own kh//2-row zero halo and the padded images are
+                     stacked into one tall (1, N*(H+2*ph), W) "image", so
+                     the whole batch rides the row-tile grid axis instead of
+                     a serial leading batch axis.
+
+`default_blocks` is the cache-miss heuristic; measured winners live in the
+per-backend JSON cache (`repro.tuning.cache`, populated by
+`repro.tuning.autotune`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+#: block_rows candidates for divisor-based row banding, best (deepest) first.
+_BLOCK_ROWS = (128, 64, 32, 16, 8)
+
+#: soft ceiling on a row band's height (keeps the per-step VMEM footprint of
+#: a kh-view band stack around a few MiB at typical widths).
+MAX_BLOCK_ROWS = 1024
+
+
+class BlockConfig(NamedTuple):
+    """One grid organization of the conv datapath (DESIGN.md §8)."""
+
+    block_rows: int
+    block_cols: int | None      # None = full width (no column tiling)
+    batch_fold: bool
+
+    def as_dict(self) -> dict:
+        return {"block_rows": self.block_rows, "block_cols": self.block_cols,
+                "batch_fold": self.batch_fold}
+
+
+def round_up(x: int, mult: int) -> int:
+    return -(-int(x) // mult) * mult
+
+
+def choose_block_rows(h: int) -> int:
+    """Largest divisor-candidate band height for an unfolded image of H rows
+    (else the minimum: the pass pads H up to a multiple of it)."""
+    for br in _BLOCK_ROWS:
+        if h % br == 0:
+            return br
+    return _BLOCK_ROWS[-1]
+
+
+def default_blocks(kind: str, n: int, h: int, w: int, kh: int, kw: int, *,
+                   batch_fold: bool | None = None) -> BlockConfig:
+    """Cache-miss heuristic (DESIGN.md §8).
+
+    Small-image batches fold into the row axis (the serial leading batch
+    axis is the measured n=8 regression); the folded height is then cut
+    into the fewest row bands that stay under `MAX_BLOCK_ROWS`, rounded to
+    the sublane multiple of 8. Column tiling only engages on wide images
+    where a full-width band would be an oversized VMEM tile. `kind` is the
+    dataflow ('direct' | 'fused'); the heuristic is shared between them.
+    `batch_fold` forces the fold decision (a caller's explicit choice) so
+    the derived band height stays consistent with it -- a serial-batch
+    request must get per-image bands, not a fold-sized tall band.
+    """
+    ph = kh // 2
+    fold = (n > 1 and h <= 256) if batch_fold is None else bool(batch_fold)
+    if fold:
+        tall = n * (h + 2 * ph)
+        steps = max(1, -(-tall // MAX_BLOCK_ROWS))
+        br = round_up(-(-tall // steps), 8)
+    else:
+        br = choose_block_rows(h)
+    br = max(br, 2 * ph, 8)
+    bc = None if w <= 512 else 256
+    return BlockConfig(br, bc, fold)
+
+
+__all__ = ["MAX_BLOCK_ROWS", "BlockConfig", "choose_block_rows",
+           "default_blocks", "round_up"]

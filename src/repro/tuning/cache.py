@@ -1,0 +1,155 @@
+"""The per-backend block-shape cache consulted by the conv datapath
+(DESIGN.md §8).
+
+Format -- one committable JSON file per platform, `blocks_<backend>.json`
+next to this module (override the directory with `REPRO_TUNE_CACHE`):
+
+    {
+      "meta": {"backend": "cpu", "generated": "<ISO-8601>", "version": 1},
+      "configs": {
+        "<kind>/<mult_impl>/n4x128x128/k5x5": {
+          "block_rows": 1040, "block_cols": null, "batch_fold": true,
+          "us_per_call": 1234.5
+        }, ...
+      }
+    }
+
+Keys are `config_key(kind, n, h, w, kh, kw, mult_impl)` -- the dataflow
+('direct' | 'fused'; the two-pass separable stages are 'direct' entries
+distinguished by their 1-D tap extents), the resolved tap-product
+implementation
+('kcm' | 'recurse'), the batch/image shape and the filter extent. The
+multiplier *method* is deliberately not in the key: the KCM gather's cost is
+method-independent and the cache is keyed the way the ISSUE's autotuner
+sweeps it -- per (image shape, backend, mult_impl).
+
+`generated` honors BENCH_TIMESTAMP (like BENCH_kernels.json) and keys are
+sorted, so regenerating on a pinned clock is byte-deterministic up to the
+measured winners themselves.
+
+`resolve_blocks` is the single lookup path: explicit per-call values win,
+then the cache, then the `default_blocks` heuristic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+from functools import lru_cache
+
+import jax
+
+from repro.tuning.blocks import BlockConfig, default_blocks
+
+CACHE_VERSION = 1
+
+
+def backend_key() -> str:
+    """Platform key for the cache file: the default JAX backend name."""
+    return jax.default_backend()
+
+
+def cache_dir() -> pathlib.Path:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    return pathlib.Path(env) if env else pathlib.Path(__file__).parent
+
+
+def cache_path(backend: str | None = None) -> pathlib.Path:
+    return cache_dir() / f"blocks_{backend or backend_key()}.json"
+
+
+def config_key(kind: str, n: int, h: int, w: int, kh: int, kw: int,
+               mult_impl: str) -> str:
+    return f"{kind}/{mult_impl}/n{n}x{h}x{w}/k{kh}x{kw}"
+
+
+def cache_timestamp() -> str:
+    """BENCH_TIMESTAMP when set (pinned, reproducible artifacts), else UTC."""
+    return os.environ.get("BENCH_TIMESTAMP") or time.strftime(
+        "%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+
+
+@lru_cache(maxsize=None)
+def _load(path: str) -> dict:
+    p = pathlib.Path(path)
+    if not p.exists():
+        return {}
+    try:
+        data = json.loads(p.read_text())
+    except (OSError, json.JSONDecodeError):
+        return {}
+    return data.get("configs", {}) if isinstance(data, dict) else {}
+
+
+def load_cache(backend: str | None = None) -> dict:
+    """key -> {block_rows, block_cols, batch_fold, us_per_call} mapping."""
+    return _load(str(cache_path(backend)))
+
+
+def invalidate_cache() -> None:
+    """Drop the in-process cache (after writes, or in tests)."""
+    _load.cache_clear()
+
+
+def store_cache(configs: dict, backend: str | None = None) -> pathlib.Path:
+    """Write the committable per-backend cache file; returns its path."""
+    backend = backend or backend_key()
+    path = cache_path(backend)
+    payload = {
+        "meta": {"backend": backend, "generated": cache_timestamp(),
+                 "version": CACHE_VERSION},
+        "configs": {k: configs[k] for k in sorted(configs)},
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    invalidate_cache()
+    return path
+
+
+def resolve_blocks(
+    kind: str,
+    n: int,
+    h: int,
+    w: int,
+    kh: int,
+    kw: int,
+    mult_impl: str,
+    *,
+    block_rows: int | None = None,
+    block_cols: int | None = None,
+    batch_fold: bool | None = None,
+) -> BlockConfig:
+    """Tuned-cache lookup with explicit-override and heuristic fallback.
+
+    Any explicitly supplied field wins unconditionally. Unset fields come
+    from the backend cache only when its entry for this exact
+    (kind, shape, mult_impl) AGREES with every explicit field -- a cached
+    winner tuned for (say) a folded grid must not donate its fold-sized
+    band height to an explicitly unfolded call. On disagreement (or cache
+    miss) the `default_blocks` heuristic fills the gaps, with the fold
+    decision pinned to the caller's. `block_cols` has no "explicitly full
+    width" spelling -- pass `block_cols=w` (a tile as wide as the image
+    disables column tiling).
+    """
+    base: BlockConfig | None = None
+    entry = load_cache().get(config_key(kind, n, h, w, kh, kw, mult_impl))
+    if entry:
+        cached = BlockConfig(entry["block_rows"], entry["block_cols"],
+                             bool(entry["batch_fold"]))
+        if ((block_rows is None or int(block_rows) == cached.block_rows)
+                and (block_cols is None or block_cols == cached.block_cols)
+                and (batch_fold is None
+                     or bool(batch_fold) == cached.batch_fold)):
+            base = cached
+    if base is None:
+        base = default_blocks(kind, n, h, w, kh, kw, batch_fold=batch_fold)
+    return BlockConfig(
+        base.block_rows if block_rows is None else int(block_rows),
+        base.block_cols if block_cols is None else int(block_cols),
+        base.batch_fold if batch_fold is None else bool(batch_fold),
+    )
+
+
+__all__ = ["backend_key", "cache_path", "config_key", "invalidate_cache",
+           "load_cache", "resolve_blocks", "store_cache"]

@@ -1,6 +1,9 @@
 """Filter-bank sweeps: every bank filter x multiplier vs the pure-jnp
-oracle, the zero-error REFMLM claim on every filter, and the separable ==
-direct identity for exact multipliers (DESIGN.md §5).
+oracle, the zero-error REFMLM claim on every filter, the separable ==
+direct identity for exact multipliers (DESIGN.md §5), and the tiling
+invariance of the §8 grid overhaul: every output is bit-identical across
+row-band heights, column-tile widths, batch folds, and the autotuned
+default.
 
 Kernels run in interpret mode (CPU container; TPU is the target). Integer
 outputs must match the oracle EXACTLY -- the filter datapath is pure-integer
@@ -67,6 +70,69 @@ class TestSeparable:
     def test_nonseparable_request_raises(self):
         with pytest.raises(ValueError, match="separable"):
             apply_filter(BATCH, "laplacian", separable=True)
+
+
+#: (block_rows, block_cols, batch_fold) grid organizations the outputs must
+#: be invariant to -- band taller than H (pads), narrow column tiles at the
+#: 5x5 halo floor, folded and unfolded batches, non-divisor shapes.
+TILINGS = (
+    (8, 16, False),
+    (16, 8, True),
+    (64, None, True),
+    (104, 24, True),
+)
+
+
+class TestTilingInvariance:
+    @pytest.mark.parametrize("name", FILTER_NAMES)
+    def test_every_filter_invariant_across_grids(self, name):
+        """§8 guarantee: the grid organization is a pure throughput knob."""
+        base = np.asarray(apply_filter(BATCH, name, method="refmlm"))
+        for br, bc, fold in TILINGS:
+            got = apply_filter(BATCH, name, method="refmlm", block_rows=br,
+                               block_cols=bc, batch_fold=fold)
+            np.testing.assert_array_equal(np.asarray(got), base,
+                                          err_msg=f"{name} br={br} bc={bc} "
+                                                  f"fold={fold}")
+
+    @pytest.mark.parametrize("method", ["exact", "mitchell", "odma"])
+    def test_approximate_methods_invariant_across_grids(self, method):
+        """Tiling must not perturb approximation error either."""
+        base = np.asarray(apply_filter(BATCH, "gaussian5", method=method))
+        for br, bc, fold in TILINGS:
+            got = apply_filter(BATCH, "gaussian5", method=method,
+                               block_rows=br, block_cols=bc, batch_fold=fold)
+            np.testing.assert_array_equal(np.asarray(got), base,
+                                          err_msg=f"br={br} bc={bc} fold={fold}")
+
+    @pytest.mark.parametrize("dataflow", ["direct", "two_pass", "fused"])
+    def test_every_dataflow_invariant_across_grids(self, dataflow):
+        kw = dict(separable=dataflow != "direct",
+                  fused=dataflow == "fused") if dataflow != "direct" \
+            else dict(separable=False)
+        base = np.asarray(apply_filter(BATCH, "gaussian5", method="refmlm",
+                                       **kw))
+        for br, bc, fold in TILINGS:
+            got = apply_filter(BATCH, "gaussian5", method="refmlm",
+                               block_rows=br, block_cols=bc, batch_fold=fold,
+                               **kw)
+            np.testing.assert_array_equal(np.asarray(got), base,
+                                          err_msg=f"{dataflow} br={br} "
+                                                  f"bc={bc} fold={fold}")
+
+    def test_recursion_impl_invariant_across_grids(self):
+        base = np.asarray(apply_filter(BATCH, "gaussian3", method="refmlm",
+                                       mult_impl="recurse"))
+        for br, bc, fold in TILINGS[1:2]:
+            got = apply_filter(BATCH, "gaussian3", method="refmlm",
+                               mult_impl="recurse", block_rows=br,
+                               block_cols=bc, batch_fold=fold)
+            np.testing.assert_array_equal(np.asarray(got), base)
+
+    def test_narrow_column_tile_raises_below_halo_floor(self):
+        with pytest.raises(ValueError, match="column halo"):
+            apply_filter(BATCH, "gaussian5", method="refmlm", separable=False,
+                         block_cols=4)
 
 
 class TestShapesAndSpecs:

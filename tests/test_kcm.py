@@ -14,7 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.kcm import METHODS, filter_tables, product_table, tap_multiplier
+from repro.core.kcm import (
+    METHODS,
+    filter_tables,
+    product_table,
+    tables_acc_bound,
+    tap_multiplier,
+)
 from repro.core.refmlm import refmlm
 from repro.filters import FILTER_NAMES, apply_filter, get_filter
 from repro.filters.conv import conv2d_pass, fused_separable_pass
@@ -48,6 +54,21 @@ class TestProductTables:
         assert tabs.shape == (4, 16)
         np.testing.assert_array_equal(tabs[1], -2 * np.arange(16))
         np.testing.assert_array_equal(tabs[2], 3 * np.arange(16))
+
+    def test_filter_tables_narrow_to_int16_when_products_fit(self):
+        """§8 width analysis: small-product ROMs store at int16 (halved
+        VMEM), wide ones stay int32; values identical either way."""
+        small = filter_tables("exact", np.array([4, 8, 4]), 8)
+        assert small.dtype == np.int16        # max |product| = 8*255 = 2040
+        wide = filter_tables("exact", np.array([255]), 16)
+        assert wide.dtype == np.int32         # 255 * 65535 >= 2**15
+        np.testing.assert_array_equal(
+            small, filter_tables("exact", np.array([4, 8, 4]), 8,
+                                 narrow=False))
+
+    def test_tables_acc_bound_is_sum_of_per_tap_maxima(self):
+        tabs = filter_tables("exact", np.array([4, -8, 4]), 8)
+        assert tables_acc_bound(tabs) == (4 + 8 + 4) * 255
 
 
 class TestKCMConv:
@@ -89,6 +110,17 @@ class TestKCMConv:
     def test_unknown_mult_impl_raises(self):
         with pytest.raises(ValueError, match="mult_impl"):
             conv2d_pass(BATCH, get_filter("gaussian3").taps, mult_impl="rom")
+
+    @pytest.mark.parametrize("method", ["refmlm", "mitchell"])
+    def test_kcm_equals_recursion_under_tiled_folded_grid(self, method):
+        """§8: the gather and recursion paths agree on every grid
+        organization, not just the default."""
+        taps = get_filter("sharpen3").taps
+        kw = dict(method=method, nbits=8, shift=5, post="clip",
+                  block_rows=16, block_cols=16, batch_fold=True)
+        kcm = conv2d_pass(BATCH, taps, mult_impl="kcm", **kw)
+        rec = conv2d_pass(BATCH, taps, mult_impl="recurse", **kw)
+        np.testing.assert_array_equal(np.asarray(kcm), np.asarray(rec))
 
 
 class TestFlattenedREFMLM:
@@ -154,3 +186,21 @@ class TestFusedSeparable:
     def test_fused_on_direct_filter_raises(self):
         with pytest.raises(ValueError, match="separable"):
             apply_filter(BATCH, "laplacian", fused=True)
+
+    def test_fused_explicit_shallow_block_rows_raises(self):
+        """Explicit grid values win or fail loud -- never silently clamped."""
+        taps = np.array([1, 4, 6, 4, 1])
+        with pytest.raises(ValueError, match="row halo"):
+            fused_separable_pass(BATCH, taps, taps, block_rows=2)
+
+    def test_fused_invariant_under_column_tiles_and_fold(self):
+        """§8: the 2x2 paired-view halo of the tiled fused kernel is
+        bit-identical to the full-width band."""
+        kw = dict(method="refmlm", nbits=8, nbits2=16, shift=8, post="clip")
+        taps = np.array([1, 4, 6, 4, 1])
+        base = fused_separable_pass(BATCH, taps, taps, **kw)
+        for br, bc, fold in ((16, 16, False), (24, 8, True), (112, 16, True)):
+            got = fused_separable_pass(BATCH, taps, taps, block_rows=br,
+                                       block_cols=bc, batch_fold=fold, **kw)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(base),
+                                          err_msg=f"br={br} bc={bc} fold={fold}")

@@ -4,6 +4,7 @@ Kernels run in interpret mode (CPU container; TPU is the target). Integer
 outputs must match the oracle EXACTLY (the kernels are pure-integer like the
 paper's RTL); float rescales use allclose.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -113,3 +114,13 @@ class TestGaussianConvKernel:
         got = gaussian_filter(img, k, method="exact", block_rows=32)
         want = ref.gaussian_conv3x3_ref(img, k, method="exact")
         np.testing.assert_array_equal(np.asarray(got, np.int32), np.asarray(want))
+
+    def test_composes_under_outer_jit(self):
+        """A caller's own jit (traced taps) must degrade to the recursion
+        path, not crash -- same output either way."""
+        img = jnp.asarray(RNG.integers(0, 256, (32, 32)), jnp.int32)
+        k = jnp.asarray(gaussian_kernel_3x3())
+        eager = gaussian_filter(img, k, method="refmlm")
+        jitted = jax.jit(lambda i, t: gaussian_filter(i, t, method="refmlm"))
+        np.testing.assert_array_equal(np.asarray(jitted(img, k)),
+                                      np.asarray(eager))

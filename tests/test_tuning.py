@@ -1,0 +1,172 @@
+"""The block-shape autotuner (repro.tuning, DESIGN.md §8): heuristic
+defaults, cache determinism, and the explicit > cached > heuristic
+resolution order."""
+import json
+
+import pytest
+
+from repro.tuning import (
+    BlockConfig,
+    choose_block_rows,
+    config_key,
+    default_blocks,
+    invalidate_cache,
+    load_cache,
+    resolve_blocks,
+    store_cache,
+)
+from repro.tuning.autotune import DEFAULT_SWEEP, candidate_blocks, tune
+from repro.tuning.blocks import round_up
+from repro.tuning.cache import backend_key, cache_path
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the cache at an empty tmp dir for the duration of a test."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    invalidate_cache()
+    yield tmp_path
+    invalidate_cache()
+
+
+class TestHeuristic:
+    def test_round_up(self):
+        assert round_up(130, 8) == 136
+        assert round_up(128, 8) == 128
+
+    def test_choose_block_rows_is_conv_reexport(self):
+        from repro.filters.conv import choose_block_rows as conv_cbr
+        assert conv_cbr is choose_block_rows
+
+    def test_small_batches_fold(self):
+        cfg = default_blocks("direct", 8, 128, 128, 3, 3)
+        assert cfg.batch_fold
+        assert cfg.block_rows % 8 == 0
+        # fewest-band cut of the folded tall height (8 * 130 = 1040 rows
+        # exceeds MAX_BLOCK_ROWS once, so two bands)
+        tall = 8 * (128 + 2)
+        assert -(-tall // cfg.block_rows) == 2
+        assert cfg.block_cols is None
+
+    def test_single_image_does_not_fold(self):
+        cfg = default_blocks("direct", 1, 128, 128, 5, 5)
+        assert not cfg.batch_fold
+        assert cfg.block_rows == choose_block_rows(128)
+
+    def test_large_images_do_not_fold_but_do_tile_columns(self):
+        cfg = default_blocks("direct", 4, 1024, 1024, 3, 3)
+        assert not cfg.batch_fold          # 1024 rows per image is not small
+        assert cfg.block_cols == 256
+
+    def test_fused_halo_floor(self):
+        cfg = default_blocks("fused", 2, 8, 64, 5, 5)
+        assert cfg.block_rows >= 2 * (5 // 2)
+
+
+class TestCandidates:
+    @pytest.mark.parametrize("row", DEFAULT_SWEEP[:4])
+    def test_candidates_valid_and_unique(self, row):
+        kind, n, h, w, kh, kw, _ = row
+        cands = list(candidate_blocks(kind, n, h, w, kh, kw))
+        assert cands and len(cands) == len(set(cands))
+        for cfg in cands:
+            assert cfg.block_rows >= 8
+            assert not (cfg.batch_fold and n == 1)
+
+
+class TestCache:
+    KEY = config_key("direct", 2, 48, 40, 3, 3, "kcm")
+    ENTRY = {"block_rows": 24, "block_cols": 16, "batch_fold": True,
+             "us_per_call": 1.0}
+
+    def test_key_format(self):
+        assert self.KEY == "direct/kcm/n2x48x40/k3x3"
+
+    def test_store_load_roundtrip(self, tmp_cache):
+        store_cache({self.KEY: self.ENTRY})
+        assert load_cache()[self.KEY] == self.ENTRY
+
+    def test_store_is_deterministic_under_pinned_timestamp(self, tmp_cache,
+                                                           monkeypatch):
+        monkeypatch.setenv("BENCH_TIMESTAMP", "2026-01-01T00:00:00Z")
+        configs = {self.KEY: self.ENTRY,
+                   config_key("fused", 1, 8, 8, 3, 3, "kcm"):
+                       {"block_rows": 8, "block_cols": None,
+                        "batch_fold": False, "us_per_call": 2.0}}
+        path = store_cache(configs)
+        first = path.read_bytes()
+        store_cache(configs)
+        assert path.read_bytes() == first
+        meta = json.loads(first)["meta"]
+        assert meta["generated"] == "2026-01-01T00:00:00Z"
+        assert meta["backend"] == backend_key()
+
+    def test_missing_or_corrupt_cache_falls_back(self, tmp_cache):
+        assert load_cache() == {}
+        cache_path().write_text("{not json")
+        invalidate_cache()
+        assert load_cache() == {}
+        cfg = resolve_blocks("direct", 2, 48, 40, 3, 3, "kcm")
+        assert cfg == default_blocks("direct", 2, 48, 40, 3, 3)
+
+
+class TestResolve:
+    def test_cached_entry_wins_over_heuristic(self, tmp_cache):
+        store_cache({TestCache.KEY: TestCache.ENTRY})
+        cfg = resolve_blocks("direct", 2, 48, 40, 3, 3, "kcm")
+        assert cfg == BlockConfig(24, 16, True)
+
+    def test_explicit_fields_win_over_cache(self, tmp_cache):
+        """Explicit values always land; a cache entry that disagrees with
+        any of them is rejected wholesale (its other fields were tuned for
+        a different organization), so the rest comes from the heuristic."""
+        store_cache({TestCache.KEY: TestCache.ENTRY})
+        cfg = resolve_blocks("direct", 2, 48, 40, 3, 3, "kcm",
+                             block_rows=8, batch_fold=False)
+        heur = default_blocks("direct", 2, 48, 40, 3, 3, batch_fold=False)
+        assert cfg == BlockConfig(8, heur.block_cols, False)
+
+    def test_agreeing_explicit_fields_keep_the_cache(self, tmp_cache):
+        store_cache({TestCache.KEY: TestCache.ENTRY})
+        cfg = resolve_blocks("direct", 2, 48, 40, 3, 3, "kcm",
+                             batch_fold=True)      # agrees with the entry
+        assert cfg == BlockConfig(24, 16, True)
+
+    def test_unfolding_a_fold_tuned_entry_gets_per_image_bands(self, tmp_cache):
+        """The serial-batch baseline must not inherit a fold-sized tall
+        band from a fold-tuned winner (it would pad every image to the
+        tall height and silently waste ~Nx compute)."""
+        key = config_key("direct", 8, 128, 128, 3, 3, "kcm")
+        store_cache({key: {"block_rows": 1040, "block_cols": None,
+                           "batch_fold": True, "us_per_call": 1.0}})
+        cfg = resolve_blocks("direct", 8, 128, 128, 3, 3, "kcm",
+                             batch_fold=False)
+        assert cfg == BlockConfig(choose_block_rows(128), None, False)
+
+    def test_other_impl_misses_the_cache(self, tmp_cache):
+        store_cache({TestCache.KEY: TestCache.ENTRY})
+        cfg = resolve_blocks("direct", 2, 48, 40, 3, 3, "recurse")
+        assert cfg == default_blocks("direct", 2, 48, 40, 3, 3)
+
+
+class TestTune:
+    def test_tune_records_the_fastest_candidate(self, tmp_cache, monkeypatch):
+        """tune() with a stubbed timer must pick the argmin and emit a
+        store_cache-ready mapping."""
+        fake = {BlockConfig(32, None, False): 30.0,
+                BlockConfig(64, None, False): 10.0}
+
+        def measure_stub(kind, cfg, n, h, w, kh, kw, impl, iters=3):
+            return fake.get(cfg, 99.0)
+
+        monkeypatch.setattr("repro.tuning.autotune.measure", measure_stub)
+        monkeypatch.setattr("repro.tuning.autotune.candidate_blocks",
+                            lambda *a: iter(fake))
+        sweep = [("direct", 1, 128, 128, 3, 3, "kcm")]
+        configs = tune(sweep, verbose=False)
+        key = config_key("direct", 1, 128, 128, 3, 3, "kcm")
+        assert configs[key]["block_rows"] == 64
+        assert configs[key]["us_per_call"] == 10.0
+        store_cache(configs)
+        assert resolve_blocks("direct", 1, 128, 128, 3, 3,
+                              "kcm").block_rows == 64
