@@ -25,9 +25,23 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = ""):
-    RESULTS.append({"name": name, "us_per_call": round(us, 1),
-                    "derived": derived})
+def emit(name: str, us: float, derived: str = "", **fields):
+    """Record one benchmark row in the shared emit schema.
+
+    `derived` is the legacy free-form annotation; structured facts go in
+    `**fields` (key=value pairs -- exec mode, device count, mpix_s,
+    exactness flags, ...). Fields fold into the printed CSV's derived
+    column and ride the JSON artifact as a machine-readable `fields`
+    mapping, so new row families (e.g. the distribute variants) never
+    need ad-hoc JSON emission of their own.
+    """
+    if fields:
+        tail = " ".join(f"{k}={v}" for k, v in fields.items())
+        derived = f"{derived} {tail}".strip()
+    row = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+    if fields:
+        row["fields"] = fields
+    RESULTS.append(row)
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -43,9 +57,14 @@ def write_bench_json(path: str = "BENCH_kernels.json",
     """Write name -> {us_per_call, derived, timestamp} for every emitted row
     whose name starts with `prefix`; returns the written mapping."""
     ts = bench_timestamp()
-    rows = {r["name"]: {"us_per_call": r["us_per_call"],
-                        "derived": r["derived"], "timestamp": ts}
-            for r in RESULTS if r["name"].startswith(prefix)}
+    rows = {}
+    for r in RESULTS:
+        if not r["name"].startswith(prefix):
+            continue
+        rows[r["name"]] = {"us_per_call": r["us_per_call"],
+                           "derived": r["derived"], "timestamp": ts}
+        if "fields" in r:
+            rows[r["name"]]["fields"] = r["fields"]
     with open(path, "w") as f:
         json.dump(rows, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -19,10 +19,18 @@ Block shapes default through the per-backend autotune cache
 (`repro.tuning`); regenerate it with `python -m repro.tuning.autotune`
 before a bench run on a new platform.
 
+Distribution rows (DESIGN.md §9): local vs sharded (shard_map over the
+host-device mesh -- requires the process to start with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; with one visible
+device the sharded rows are skipped) vs streamed (out-of-core tiles) on
+the n=32 batch, with bit-identity recorded alongside throughput.
+
 ``--smoke`` runs the reduced-size regression guards used by
 scripts/check.sh: the KCM path must not lose to the recursion path, and
 batched throughput (n=8) must not fall below single-image throughput for
-any guarded bank filter.
+any guarded bank filter. ``--smoke-dist`` is the multi-device guard:
+sharded output must be bit-identical to local and sharded n=32 throughput
+must not fall below local n=32 on any guarded filter.
 """
 from __future__ import annotations
 
@@ -37,6 +45,10 @@ from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3, limb_matmul,
 
 #: bank filters under the batch-scaling smoke guard (n=8 must beat n=1).
 SCALING_GUARD_FILTERS = ("gaussian3", "gaussian5")
+
+#: bank filters under the sharded-throughput smoke guard (sharded n=32 must
+#: not lose to local n=32; DESIGN.md §9).
+DIST_GUARD_FILTERS = ("gaussian5",)
 
 
 def _img_batch(rng, batch: int, h: int = 128, w: int = 128):
@@ -95,6 +107,48 @@ def _bank_scaling(rng, *, tag: str, h: int = 128, w: int = 128,
     return mpix
 
 
+def _dist_variants(rng, *, tag: str, n: int = 32, h: int = 128, w: int = 128,
+                   filt: str = "gaussian5"):
+    """The §9 execution-mode rows: local vs sharded vs streamed on one
+    batch, bit-identity recorded with the throughput. Returns
+    mode -> {us, mpix_s, identical} for the smoke guard."""
+    from repro import distribute
+
+    imgs = _img_batch(rng, n, h, w)
+    npix = n * h * w
+    out = {}
+
+    def run(mode, fn, **fields):
+        ref = np.asarray(fn())
+        identical = bool((ref == np.asarray(out["local"]["out"])).all()) \
+            if "local" in out else True
+        us = time_fn(fn, iters=3)
+        mpix = round(npix / us, 2)
+        emit(f"kernel_{tag}{filt}_{mode}_n{n}", us, exec=mode,
+             mpix_s=mpix, bit_identical=identical, **fields)
+        out[mode] = {"us": us, "mpix_s": mpix, "identical": identical,
+                     "out": ref}
+        return us
+
+    run("local", lambda: apply_filter(imgs, filt, method="refmlm"))
+    ndev = distribute.device_count()
+    if ndev >= 2:
+        run("sharded", lambda: apply_filter(imgs, filt, method="refmlm",
+                                            exec="sharded", devices=ndev),
+            devices=ndev)
+        emit(f"kernel_{tag}{filt}_sharded_speedup",
+             out["local"]["us"] / out["sharded"]["us"],
+             x_vs_local=round(out["local"]["us"] / out["sharded"]["us"], 2))
+    else:
+        print(f"# skipping kernel_{tag}{filt}_sharded rows: 1 visible device "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    src = np.asarray(imgs, np.uint8)
+    run("streamed", lambda: apply_filter(src, filt, method="refmlm",
+                                         exec="streamed", tile=(64, 64)),
+        tile="64x64")
+    return out
+
+
 def main():
     rng = np.random.default_rng(0)
     lhs = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
@@ -141,6 +195,9 @@ def main():
     # with the fold-vs-serial-batch §8 before/after.
     _bank_scaling(rng, tag="bank_")
 
+    # execution-mode rows (§9): local vs sharded vs streamed at n=32.
+    _dist_variants(rng, tag="dist_")
+
     imgs = _img_batch(rng, 4)
     # separable (k+k taps) vs direct (k*k taps) on the 5x5 Gaussian.
     for sep in (True, False):
@@ -180,8 +237,44 @@ def smoke(threshold: float = 1.0) -> int:
     return rc
 
 
+def smoke_dist(threshold: float = 1.0) -> int:
+    """Multi-device perf + identity guard (scripts/check.sh, DESIGN.md §9).
+
+    Requires >= 2 visible devices (check.sh starts the process with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8). Fails when
+    (a) sharded or streamed output differs from local anywhere, or
+    (b) sharded n=32 throughput falls below local n=32 for any guarded
+    filter. The generous 1.0x threshold only catches scale-out *losing*."""
+    from repro import distribute
+    if distribute.device_count() < 2:
+        print("# FAIL: --smoke-dist needs >= 2 devices; start with "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return 1
+    rng = np.random.default_rng(0)
+    rc = 0
+    for filt in DIST_GUARD_FILTERS:
+        out = _dist_variants(rng, tag="smoke_dist_", n=32, h=64, w=64,
+                             filt=filt)
+        for mode in ("sharded", "streamed"):
+            if not out[mode]["identical"]:
+                print(f"# FAIL: {mode} {filt} output is not bit-identical "
+                      "to local")
+                rc = 1
+        scaling = out["sharded"]["mpix_s"] / out["local"]["mpix_s"]
+        print(f"# smoke-dist: {filt} sharded runs {scaling:.2f}x local "
+              f"mpix/s at n=32 (threshold {threshold}x)")
+        if scaling < threshold:
+            print(f"# FAIL: sharding regresses {filt} throughput "
+                  f"(sharded {out['sharded']['mpix_s']:.2f} < local "
+                  f"{out['local']['mpix_s']:.2f} mpix/s)")
+            rc = 1
+    return rc
+
+
 if __name__ == "__main__":
     if "--smoke" in sys.argv[1:]:
         sys.exit(smoke())
+    if "--smoke-dist" in sys.argv[1:]:
+        sys.exit(smoke_dist())
     main()
     write_bench_json()

@@ -40,8 +40,10 @@ def main():
         us = time_fn(fn, a, b)
         p = fn(a, b)
         exact = bool((p.astype(jnp.uint32) == true).all())
-        ocs = f" ops={oc['base_mults']}mul+{oc['adds']}add" if oc else ""
-        emit(f"table9_{name}", us, f"exact={exact}{ocs}")
+        fields = dict(exact=exact)
+        if oc:
+            fields.update(base_mults=oc["base_mults"], adds=oc["adds"])
+        emit(f"table9_{name}", us, **fields)
 
     # MXU transplant: wide matmul from int8 passes (3 vs 4 passes)
     af = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
@@ -52,7 +54,7 @@ def main():
         us = time_fn(fn, af, bf)
         rel = float(jnp.abs(fn(af, bf) - exact_mm).max() / jnp.abs(exact_mm).max())
         emit(f"table9_mxu_limb_{'kom3' if kar else 'schoolbook'}", us,
-             f"mxu_passes={passes} relerr={rel:.2e}")
+             mxu_passes=passes, relerr=f"{rel:.2e}")
 
 
 if __name__ == "__main__":

@@ -3,21 +3,50 @@ batched filter bank: salt&pepper-noised fingerprint images pushed through
 every bank filter with every multiplier, PSNR per (filter, multiplier).
 
     PYTHONPATH=src python examples/gaussian_filter_fingerprint.py \
-        [--noise 20] [--batch 4] [--filters gaussian3,sobel_x] [--size 128]
+        [--noise 20] [--batch 4] [--filters gaussian3,sobel_x] [--size 128] \
+        [--exec local|sharded|streamed] [--devices N]
 
 Part 1 reproduces the paper's own 3x3 Gaussian experiment (Fig. 9 table);
-part 2 runs the bank (repro.filters, DESIGN.md §5). For each filter the
-error-free REFMLM output must be bit-identical to the exact multiplier's.
+part 2 runs the bank (repro.filters, DESIGN.md §5) under the chosen
+execution mode (DESIGN.md §9) -- `--exec sharded --devices 8` distributes
+the batch over a host-device mesh (asserted bit-identical to local),
+`--exec streamed` walks the images in out-of-core tiles. For each filter
+the error-free REFMLM output must be bit-identical to the exact
+multiplier's.
 """
 import argparse
+import os
+import sys
 
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.refmlm_filter import CONFIG
-from repro.data.images import add_salt_pepper, fingerprint, psnr
-from repro.filters import FILTER_NAMES, apply_filter, get_filter
-from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3
+def _early_device_flag(argv):
+    """--devices N must set XLA_FLAGS before JAX initializes below.
+
+    Handles both '--devices N' and '--devices=N'; malformed spellings are
+    left for argparse to report properly in main()."""
+    n = None
+    for i, arg in enumerate(argv):
+        if arg == "--devices" and i + 1 < len(argv):
+            n = argv[i + 1]
+        elif arg.startswith("--devices="):
+            n = arg.split("=", 1)[1]
+    if n is None or not n.isdigit():
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={int(n)} " + flags).strip()
+
+
+_early_device_flag(sys.argv[1:])
+
+import jax.numpy as jnp                                           # noqa: E402
+import numpy as np                                                # noqa: E402
+
+from repro.configs.refmlm_filter import CONFIG                    # noqa: E402
+from repro.data.images import add_salt_pepper, fingerprint, psnr  # noqa: E402
+from repro.filters import FILTER_NAMES, apply_filter, get_filter  # noqa: E402
+from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3  # noqa: E402
 
 MULTIPLIERS = ["exact", "refmlm", "refmlm_nc", "mitchell", "mitchell_ecc1",
                "mitchell_ecc3", "odma"]
@@ -41,21 +70,42 @@ def paper_experiment(noise: int, size: int) -> None:
     print("\nREFMLM == exact multiplier filter output (paper's zero-error claim).")
 
 
-def bank_demo(noise: int, size: int, batch: int, filters: tuple[str, ...]) -> None:
+def bank_demo(noise: int, size: int, batch: int, filters: tuple[str, ...],
+              exec_mode: str = "local") -> None:
     bases = np.stack([fingerprint((size, size), seed=7 + i) for i in range(batch)])
     noisy = np.stack([add_salt_pepper(b, noise, seed=11 + i)
                       for i, b in enumerate(bases)])
     imgs = jnp.asarray(noisy.astype(np.int32))
+    exec_kw = {}
+    if exec_mode == "sharded":
+        import jax
+        ndev = len(jax.devices())
+        if ndev < 2:
+            print(f"\nonly {ndev} device visible -- pass --devices 8 to "
+                  "shard; falling back to exec=local")
+            exec_mode = "local"
+        else:
+            exec_kw = dict(exec="sharded", devices=ndev)
+    elif exec_mode == "streamed":
+        exec_kw = dict(exec="streamed", tile=(64, 64))
     print(f"\n=== filter bank over a batch of {batch} images "
-          f"({size}x{size}, {noise}% noise) ===")
+          f"({size}x{size}, {noise}% noise, exec={exec_mode}) ===")
     header = f"{'filter':12s} {'dataflow':9s}" + "".join(
         f" {m:>14s}" for m in BANK_MULTIPLIERS)
     print(header + "   (PSNR vs exact-multiplier output, dB)")
     for name in filters:
         spec = get_filter(name)
         got = {mult: np.asarray(apply_filter(imgs, name, method=mult,
-                                             block_rows=CONFIG.block_rows))
+                                             block_rows=CONFIG.block_rows,
+                                             **exec_kw))
                for mult in BANK_MULTIPLIERS}
+        if exec_kw:
+            # distribution invariance (DESIGN.md §9): scale-out execution
+            # must be bit-identical to the local path
+            local = np.asarray(apply_filter(imgs, name, method="refmlm",
+                                            block_rows=CONFIG.block_rows))
+            assert (np.asarray(got["refmlm"]) == local).all(), \
+                f"{exec_mode} output differs from local on {name}"
         row = [f"{name:12s} {'sep' if spec.separable else 'direct':9s}"]
         for mult in BANK_MULTIPLIERS:
             if (got[mult] == got["exact"]).all():
@@ -64,6 +114,8 @@ def bank_demo(noise: int, size: int, batch: int, filters: tuple[str, ...]) -> No
                 row.append(f" {psnr(got['exact'], got[mult]):14.2f}")
         print("".join(row))
         assert (got["refmlm"] == got["exact"]).all(), name
+    if exec_mode == "sharded":
+        print("\nsharded == local bit-identity held on every filter.")
     print("\nREFMLM is bit-identical to the exact multiplier on every filter.")
     print("(Mitchell is also exact where all taps are powers of two -- e.g. the")
     print(" [4,8,4] Gaussian and [1,2,1] Sobel rows -- and degrades elsewhere.)")
@@ -76,11 +128,17 @@ def main():
     ap.add_argument("--batch", type=int, default=CONFIG.batch)
     ap.add_argument("--filters", type=str, default=",".join(FILTER_NAMES),
                     help="comma-separated bank filter names")
+    ap.add_argument("--exec", default="local", dest="exec_mode",
+                    choices=("local", "sharded", "streamed"),
+                    help="bank execution mode (DESIGN.md §9)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host platform device count for --exec sharded "
+                         "(consumed before JAX starts; see _early_device_flag)")
     args = ap.parse_args()
 
     paper_experiment(args.noise, args.size)
     bank_demo(args.noise, min(args.size, 128), args.batch,
-              tuple(args.filters.split(",")))
+              tuple(args.filters.split(",")), args.exec_mode)
 
 
 if __name__ == "__main__":

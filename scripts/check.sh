@@ -11,6 +11,11 @@
 # (the DESIGN.md §8 batch-scaling guard). Generous 1.0x thresholds so only
 # a real inversion trips them.
 #
+# The multi-device smoke (--smoke-dist) restarts the bench with 8 host
+# platform devices and fails if sharded/streamed output ever differs from
+# local, or if sharded n=32 throughput falls below local n=32 on a guarded
+# filter (the DESIGN.md §9 scale-out guard).
+#
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
 # design citations can never dangle again.
@@ -53,3 +58,8 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 echo "== perf smoke (kernel_bench --smoke) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kernel_bench --smoke
+
+echo "== multi-device smoke (kernel_bench --smoke-dist, 8 host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.kernel_bench --smoke-dist

@@ -35,12 +35,19 @@ ROWS = [
      "3×3 Gaussian, refmlm, batch n=8, serial batch axis"),
     ("kernel_bank_gaussian3_n8",
      "3×3 Gaussian, refmlm, batch n=8, **batch-folded parallel grid** (§8)"),
+    ("kernel_dist_gaussian5_local_n32",
+     "5×5 Gaussian, refmlm, batch n=32, exec=local"),
+    ("kernel_dist_gaussian5_sharded_n32",
+     "5×5 Gaussian, refmlm, batch n=32, **exec=sharded** (8-device mesh, §9)"),
+    ("kernel_dist_gaussian5_streamed_n32",
+     "5×5 Gaussian, refmlm, batch n=32, exec=streamed (out-of-core 64×64 tiles, §9)"),
 ]
 SPEEDUPS = [
     ("kernel_bank_gaussian5_kcm_speedup", "KCM vs recursion"),
     ("kernel_bank_gaussian5_fused_speedup", "fused vs two-pass"),
     ("kernel_bank_gaussian3_fold_speedup", "batch fold vs serial batch (n=8)"),
     ("kernel_bank_gaussian3_batch_scaling", "n=8 vs n=1 throughput"),
+    ("kernel_dist_gaussian5_sharded_speedup", "sharded vs local (n=32, §9)"),
 ]
 
 
@@ -48,7 +55,10 @@ def build_table(bench: dict) -> str:
     missing = [n for n, _ in (*ROWS, *SPEEDUPS) if n not in bench]
     if missing:
         raise SystemExit(f"BENCH_kernels.json is missing rows {missing} -- "
-                         "stale or partial artifact; rerun the benchmarks")
+                         "stale or partial artifact; rerun the benchmarks "
+                         "(the kernel_dist_*_sharded rows need the process "
+                         "started with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     lines = [
         "| variant (4×128×128 batch, interpret mode) | µs/call | derived |",
         "|---|---|---|",

@@ -28,6 +28,7 @@ from __future__ import annotations
 import re
 from functools import lru_cache
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -63,12 +64,17 @@ def product_table(method: str, coeff: int, nbits: int) -> np.ndarray:
 
     Enumerates the full operand range through the selected multiplier once
     (cached per (method, coeff, nbits) across all filters and calls), so the
-    gather path inherits the multiplier's exact error behaviour.
+    gather path inherits the multiplier's exact error behaviour. The
+    enumeration is forced eager (`ensure_compile_time_eval`): the ROM is a
+    host-side constant even when the first request arrives inside a trace
+    (e.g. under `shard_map` in the distributed path, DESIGN.md §9, where
+    ops on constants would otherwise become tracers).
     """
     mult = tap_multiplier(method)
-    xs = jnp.arange(1 << nbits, dtype=jnp.int32)
-    cs = jnp.full_like(xs, abs(int(coeff)))
-    tab = np.asarray(mult(xs, cs, nbits), dtype=np.int64)
+    with jax.ensure_compile_time_eval():
+        xs = jnp.arange(1 << nbits, dtype=jnp.int32)
+        cs = jnp.full_like(xs, abs(int(coeff)))
+        tab = np.asarray(mult(xs, cs, nbits), dtype=np.int64)
     return (int(np.sign(coeff)) * tab).astype(np.int32)
 
 

@@ -1,0 +1,70 @@
+"""`repro.distribute` -- scale-out execution of the filter datapath
+(DESIGN.md §9): sharded (multi-device `shard_map` with halo-exchange row
+bands) and streamed (out-of-core overlapping-tile) modes, both bit-identical
+to the single-device path.
+
+Layers:
+  mesh.py     -- (batch, rows) device mesh + shard-shape planning
+                 (`filter_mesh`, `shard_dims`, `shard_local_shape`);
+  sharded.py  -- `shard_map` wrappers around the conv passes and
+                 `apply_filter`, halo via `ppermute` exchange or embedded
+                 overlapping windows;
+  streamed.py -- tile planner + out-of-core executor
+                 (`plan_tiles`, `stream_filter`).
+
+The one-call entry point mirrors the local pipeline:
+
+    from repro import distribute
+    distribute.apply_filter(imgs, "gaussian5", exec="sharded")   # mesh
+    distribute.apply_filter(big, "gaussian5", exec="streamed")   # tiles
+
+which is the same routing as `repro.filters.apply_filter(..., exec=...)`.
+"""
+from __future__ import annotations
+
+from repro.distribute.mesh import (
+    BATCH_AXIS,
+    ROWS_AXIS,
+    auto_mesh_shape,
+    device_count,
+    filter_mesh,
+    shard_dims,
+    shard_local_shape,
+)
+from repro.distribute.sharded import (
+    HALO_MODES,
+    sharded_apply_filter,
+    sharded_call,
+    sharded_conv2d_pass,
+    sharded_fused_separable_pass,
+)
+from repro.distribute.streamed import Tile, plan_tiles, stream_filter
+from repro.filters.pipeline import EXEC_MODES
+
+
+def apply_filter(imgs, filt, *, exec: str = "sharded", **kw):
+    """Thin mirror of `repro.filters.apply_filter` defaulting to scale-out
+    execution; `exec` is 'local' | 'sharded' | 'streamed' (DESIGN.md §9)."""
+    from repro.filters.pipeline import apply_filter as _apply_filter
+    return _apply_filter(imgs, filt, exec=exec, **kw)
+
+
+__all__ = [
+    "BATCH_AXIS",
+    "EXEC_MODES",
+    "HALO_MODES",
+    "ROWS_AXIS",
+    "Tile",
+    "apply_filter",
+    "auto_mesh_shape",
+    "device_count",
+    "filter_mesh",
+    "plan_tiles",
+    "shard_dims",
+    "shard_local_shape",
+    "sharded_apply_filter",
+    "sharded_call",
+    "sharded_conv2d_pass",
+    "sharded_fused_separable_pass",
+    "stream_filter",
+]

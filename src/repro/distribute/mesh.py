@@ -1,0 +1,109 @@
+"""Device-mesh plumbing for the distributed filter datapath (DESIGN.md §9).
+
+The sharded execution mode runs the conv passes under `shard_map` over a
+2-D `(batch, rows)` mesh: whole images ride the `batch` axis (no halo
+traffic) and row bands of one image ride the `rows` axis (each band carries
+a kh//2-row halo, DESIGN.md §9). On CPU CI the mesh is built from host
+platform devices -- start the process with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+(the flag must be set before JAX initializes; `examples/` set it from their
+`--devices` CLI flag, and tests/test_distribute.py reaches multiple devices
+through the subprocess pattern established by tests/test_distribution.py).
+
+`shard_dims` / `shard_local_shape` are the pure planning functions: they
+pad the global (N, H) to mesh divisibility with zero images / zero rows
+(cropped from the output, bit-identity preserved -- the pad rows reproduce
+the zero halo the local path reads anyway) and name the shard-local shape
+the conv passes -- and therefore the block-shape tuning cache
+(`repro.tuning`, DESIGN.md §8/§9) -- actually see.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.tuning.blocks import round_up
+
+#: mesh axis names: whole images x row bands.
+BATCH_AXIS = "batch"
+ROWS_AXIS = "rows"
+
+
+def device_count() -> int:
+    return len(jax.devices())
+
+
+def auto_mesh_shape(ndev: int, n: int) -> tuple[int, int]:
+    """Default (batch_shards, row_shards) factorization of `ndev` devices.
+
+    Batch parallelism first (whole images, no halo traffic): the largest
+    divisor of `ndev` that does not exceed the batch size; the leftover
+    factor shards rows. A single gigapixel image (n=1) therefore gets a
+    pure rows mesh, and n >= ndev a pure batch mesh.
+    """
+    nb = 1
+    for d in range(1, ndev + 1):
+        if ndev % d == 0 and d <= max(int(n), 1):
+            nb = d
+    return nb, ndev // nb
+
+
+def filter_mesh(devices: int | None = None,
+                mesh_shape: tuple[int, int] | None = None,
+                *, n: int = 1) -> Mesh:
+    """Build the (batch, rows) mesh for a sharded filter run.
+
+    `devices` -- how many of `jax.devices()` to use (None = all);
+    `mesh_shape` -- explicit (batch_shards, row_shards), must multiply to
+    the device count used; None picks `auto_mesh_shape` for a batch of `n`.
+    """
+    avail = jax.devices()
+    if mesh_shape is not None:
+        nb, nr = int(mesh_shape[0]), int(mesh_shape[1])
+        need = nb * nr
+        if devices is not None and int(devices) != need:
+            raise ValueError(f"mesh_shape {mesh_shape} needs {need} devices, "
+                             f"but devices={devices} was requested")
+    else:
+        need = int(devices) if devices is not None else len(avail)
+        nb, nr = auto_mesh_shape(need, n)
+    if need > len(avail):
+        raise ValueError(
+            f"mesh needs {need} devices but only {len(avail)} are visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "the process starts (DESIGN.md §9)")
+    devs = np.asarray(avail[:need]).reshape(nb, nr)
+    return Mesh(devs, (BATCH_AXIS, ROWS_AXIS))
+
+
+def shard_dims(n: int, h: int, nb: int, nr: int, ph: int) -> tuple[int, int, int]:
+    """-> (padded batch, padded rows, rows per shard) for a (nb, nr) mesh.
+
+    The batch pads to a multiple of `nb` with zero images and the rows to
+    `nr` equal bands of at least max(ceil(h/nr), ph) rows -- a band
+    shallower than the ph-row halo cannot source its neighbor exchange from
+    one hop, so images smaller than one shard are padded up instead
+    (the pad rows are zeros, exactly what the local path's zero halo reads;
+    the pad outputs are cropped).
+    """
+    n2 = round_up(max(int(n), 1), nb)
+    hl = max(-(-int(h) // nr), ph, 1)
+    return n2, hl * nr, hl
+
+
+def shard_local_shape(n: int, h: int, w: int, nb: int, nr: int,
+                      ph: int) -> tuple[int, int, int]:
+    """The (N, H, W) one shard's conv pass sees -- the shape the tuning
+    cache must be keyed on under sharded execution (DESIGN.md §9): the
+    shard-local band plus its 2*ph halo rows whenever rows are actually
+    sharded. Never the global image shape."""
+    n2, _, hl = shard_dims(n, h, nb, nr, ph)
+    ext = hl + 2 * ph if (nr > 1 and ph > 0) else hl
+    return n2 // nb, ext, int(w)
+
+
+__all__ = ["BATCH_AXIS", "ROWS_AXIS", "auto_mesh_shape", "device_count",
+           "filter_mesh", "shard_dims", "shard_local_shape"]

@@ -4,8 +4,13 @@ Layers:
   bank.py     -- the filter definitions (integer taps, fixed-point epilogue,
                  separable decompositions);
   conv.py     -- the batched multiplier-selectable Pallas convolution pass;
-  pipeline.py -- user-facing apply_filter / filter_bank_apply;
+  pipeline.py -- user-facing apply_filter / filter_bank_apply (the
+                 exec='local'|'sharded'|'streamed' routing, DESIGN.md §9);
   ref.py      -- independently-written pure-jnp oracles for tests.
+
+Scale-out execution (device-mesh sharding, out-of-core tile streaming)
+lives in `repro.distribute` and is reached through `apply_filter(...,
+exec=...)`.
 """
 from repro.filters.bank import (
     FILTER_BANK,
@@ -22,9 +27,10 @@ from repro.filters.conv import (
     fused_separable_pass,
     tap_multiplier,
 )
-from repro.filters.pipeline import apply_filter, filter_bank_apply
+from repro.filters.pipeline import EXEC_MODES, apply_filter, filter_bank_apply
 
 __all__ = [
+    "EXEC_MODES",
     "FILTER_BANK",
     "FILTER_NAMES",
     "METHODS",

@@ -148,8 +148,13 @@ def _device_tables(method: str, taps_key: tuple, shape: tuple, nbits: int):
 
     `product_table` already caches the per-coefficient host ROMs; this layer
     keeps the stacked, device-put array out of the per-call hot path (the
-    16-bit second-pass stack is ~128 KiB per tap at the narrowed width)."""
-    return jnp.asarray(_host_tables(method, taps_key, shape, nbits)[0])
+    16-bit second-pass stack is ~128 KiB per tap at the narrowed width).
+    Forced eager: the cached array must be a concrete constant even when
+    the first request arrives inside a trace (shard_map in the distributed
+    path, DESIGN.md §9) -- an lru-cached tracer would leak into every
+    later call."""
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(_host_tables(method, taps_key, shape, nbits)[0])
 
 
 def _tables_for(method: str, taps, nbits: int):

@@ -10,6 +10,12 @@ grayscale, like the paper's fingerprint experiment). The direct-vs-separable
 dataflow choice is handled here; tile padding and the grid organization
 (row bands x column tiles, batch fold) live in the conv passes, defaulted
 from the per-backend autotune cache (DESIGN.md §8).
+
+Execution modes (DESIGN.md §9): `exec='local'` is the single-device path;
+`exec='sharded'` runs the same pass under `shard_map` over a (batch, rows)
+device mesh with halo-exchanged row bands; `exec='streamed'` walks an
+out-of-core source in overlapping tiles. Both scale-out modes live in
+`repro.distribute` and are bit-identical to local by construction.
 """
 from __future__ import annotations
 
@@ -71,18 +77,24 @@ def _apply(imgs: Array, spec: FilterSpec, method: str, nbits: int,
         else:
             run = partial(conv2d_pass, interpret=interpret,
                           mult_impl=mult_impl, **blocks)
-            row = jnp.asarray(spec.sep_row, jnp.int32)[None, :]  # (1, kw)
-            col = jnp.asarray(spec.sep_col, jnp.int32)[:, None]  # (kh, 1)
+            # keep the taps host-side NumPy: under a trace (shard_map in the
+            # distributed path, DESIGN.md §9) a jnp constant would become a
+            # tracer and defeat the KCM staticness check
+            row = np.asarray(spec.sep_row, np.int32)[None, :]    # (1, kw)
+            col = np.asarray(spec.sep_col, np.int32)[:, None]    # (kh, 1)
             tmp = run(imgs, row, method=method, nbits=nbits, shift=0,
                       post="none")
             out = run(tmp, col, method=method, nbits=nb2, shift=spec.shift,
                       post=spec.post)
     else:
-        out = conv2d_pass(imgs, jnp.asarray(spec.taps, jnp.int32),
+        out = conv2d_pass(imgs, np.asarray(spec.taps, np.int32),
                           method=method, nbits=nbits, shift=spec.shift,
                           post=spec.post, interpret=interpret,
                           mult_impl=mult_impl, **blocks)
     return out.astype(jnp.uint8)
+
+
+EXEC_MODES = ("local", "sharded", "streamed")
 
 
 def apply_filter(
@@ -98,7 +110,14 @@ def apply_filter(
     block_cols: int | None = None,
     batch_fold: bool | None = None,
     interpret: bool | None = None,
-) -> Array:
+    exec: str = "local",
+    devices: int | None = None,
+    mesh_shape: tuple[int, int] | None = None,
+    halo: str = "exchange",
+    tile: tuple[int, int] | None = None,
+    tile_batch: int = 8,
+    out=None,
+):
     """Run one bank filter over an image batch through the selected multiplier.
 
     separable=None picks the two-pass dataflow whenever the spec admits one;
@@ -112,7 +131,41 @@ def apply_filter(
     batch_fold) defaults through the per-backend autotune cache -- outputs
     are bit-identical across every organization (DESIGN.md §8, asserted in
     tests), so these are pure throughput knobs.
+
+    `exec` selects the execution mode (DESIGN.md §9): 'local' (default)
+    runs on one device and returns a jax Array; 'sharded' distributes over
+    a (batch, rows) device mesh (`devices` / `mesh_shape` size it, `halo`
+    picks 'exchange' ppermute neighbor exchange or 'embedded' overlapping
+    host windows); 'streamed' walks the source out-of-core in overlapping
+    `tile`-shaped batches of `tile_batch` and returns a NumPy array
+    (writing into `out` -- an ndarray or memmap -- when given). All three
+    modes are bit-identical (asserted in tests/test_distribute.py).
     """
+    if exec not in EXEC_MODES:
+        raise ValueError(f"exec must be one of {EXEC_MODES}, got {exec!r}")
+    filter_kw = dict(method=method, nbits=nbits, separable=separable,
+                     fused=fused, mult_impl=mult_impl, block_rows=block_rows,
+                     block_cols=block_cols, batch_fold=batch_fold,
+                     interpret=interpret)
+    if exec == "sharded":
+        from repro.distribute import sharded_apply_filter
+        if tile is not None or out is not None or tile_batch != 8:
+            raise ValueError("tile/tile_batch/out are streamed-mode arguments")
+        return sharded_apply_filter(imgs, filt, devices=devices,
+                                    mesh_shape=mesh_shape, halo=halo,
+                                    **filter_kw)
+    if exec == "streamed":
+        from repro.distribute import stream_filter
+        if devices is not None or mesh_shape is not None or halo != "exchange":
+            raise ValueError("devices/mesh_shape/halo are sharded-mode "
+                             "arguments")
+        return stream_filter(np.asarray(imgs), filt,
+                             tile=tile if tile is not None else (256, 256),
+                             tile_batch=tile_batch, out=out, **filter_kw)
+    if ((devices, mesh_shape, tile, out) != (None, None, None, None)
+            or halo != "exchange" or tile_batch != 8):
+        raise ValueError("devices/mesh_shape/halo/tile/tile_batch/out "
+                         "require exec='sharded' or exec='streamed'")
     spec = get_filter(filt) if isinstance(filt, str) else filt
     if separable is None:
         separable = spec.separable
@@ -141,4 +194,4 @@ def filter_bank_apply(
             for name in names}
 
 
-__all__ = ["apply_filter", "filter_bank_apply"]
+__all__ = ["EXEC_MODES", "apply_filter", "filter_bank_apply"]

@@ -4,14 +4,20 @@ persist the winners to the per-backend cache (DESIGN.md §8).
 
     PYTHONPATH=src python -m repro.tuning.autotune            # bench shapes
     PYTHONPATH=src python -m repro.tuning.autotune --quick    # smoke shapes
+    PYTHONPATH=src python -m repro.tuning.autotune --dist     # shard/tile shapes
 
 The default sweep covers the shapes the kernel benchmarks and the smoke
 guard exercise (128x128 batches at n=1/4/8, 64x64 at n=2/8) for the 3x3 and
-5x5 filter extents in the direct and fused dataflows. The written JSON is
+5x5 filter extents in the direct and fused dataflows; `--dist` sweeps the
+shard-local band and tile-local batch shapes distributed execution traces
+with (DESIGN.md §9 -- the cache keys on what the pass sees, never the
+global image shape). The written JSON is
 committable: regenerate after kernel changes, commit the diff, and every
 default `apply_filter`/`conv2d_pass` call on that backend picks the
 measured winners up (explicit block shapes always override --
-`repro.tuning.cache.resolve_blocks`).
+`repro.tuning.cache.resolve_blocks`). Stores MERGE into the existing
+per-backend file, so a `--dist` run extends rather than clobbers the
+default sweep's winners (`--no-merge` rewrites from scratch).
 """
 from __future__ import annotations
 
@@ -42,6 +48,16 @@ DEFAULT_SWEEP: tuple[tuple, ...] = tuple(
 QUICK_SWEEP: tuple[tuple, ...] = tuple(
     (kind, n, 64, 64, 3, 3, "kcm")
     for kind in ("direct", "fused") for n in (1, 8)
+)
+#: shard-local band / tile-local batch shapes of distributed execution
+#: (DESIGN.md §9): n=32 over 8 batch shards -> (4, H, W) locals; a
+#: row-sharded single image -> (1, H/8 + 2*ph, W) bands; the streamed
+#: default (256, 256) tile at tile_batch=8 -> (8, 260, 260) for a 5x5.
+DIST_SWEEP: tuple[tuple, ...] = tuple(
+    (kind, n, h, w, k, k, "kcm")
+    for kind in ("direct", "fused")
+    for (n, h, w, k) in ((4, 128, 128, 5), (1, 132, 128, 5), (1, 20, 128, 5),
+                         (8, 260, 260, 5), (8, 132, 132, 3))
 )
 
 
@@ -151,10 +167,20 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="reduced sweep (smoke shapes only)")
+    ap.add_argument("--dist", action="store_true",
+                    help="sweep the shard/tile-local shapes of distributed "
+                         "execution (DESIGN.md §9) instead of the defaults")
+    ap.add_argument("--no-merge", action="store_true",
+                    help="rewrite the cache from this sweep alone instead of "
+                         "merging into the existing per-backend file")
     ap.add_argument("--iters", type=int, default=3)
     args = ap.parse_args(argv)
-    sweep = QUICK_SWEEP if args.quick else DEFAULT_SWEEP
+    sweep = (DIST_SWEEP if args.dist
+             else QUICK_SWEEP if args.quick else DEFAULT_SWEEP)
     configs = tune(sweep, iters=args.iters)
+    if not args.no_merge:
+        from repro.tuning.cache import load_cache
+        configs = {**load_cache(), **configs}
     path = store_cache(configs)
     print(f"# wrote {path} ({len(configs)} configs, backend={backend_key()})")
     return 0

@@ -23,6 +23,16 @@ multiplier *method* is deliberately not in the key: the KCM gather's cost is
 method-independent and the cache is keyed the way the ISSUE's autotuner
 sweeps it -- per (image shape, backend, mult_impl).
 
+The (n, h, w) in the key is ALWAYS the shape the conv pass itself traces
+with. Under distributed execution (`repro.distribute`, DESIGN.md §9) that
+is the *shard-local* band shape -- `(N/nb, H/nr + 2*ph, W)`, named by
+`repro.distribute.shard_local_shape` -- or the *tile-local* batch shape
+`(tile_batch, tile_h + 2*ph, tile_w + 2*pw)` under streaming, never the
+global image shape: a winner tuned for the global shape must not be
+silently inherited by a shard whose band has a different optimal grid
+(asserted in tests/test_distribute.py). `repro.tuning.autotune --dist`
+sweeps these shard/tile-local shapes into the cache.
+
 `generated` honors BENCH_TIMESTAMP (like BENCH_kernels.json) and keys are
 sorted, so regenerating on a pinned clock is byte-deterministic up to the
 measured winners themselves.
