@@ -45,6 +45,17 @@ def emit(name: str, us: float, derived: str = "", **fields):
     print(f"{name},{us:.1f},{derived}")
 
 
+def percentiles(samples, points=(50, 95, 99)) -> dict:
+    """p50/p95/p99 (nearest-rank: ceil(n*p/100)-th order statistic) of a
+    latency sample, as a fields mapping -- the BENCH_serve.json latency
+    row schema (keys `p50`..`p99`, same unit as the samples)."""
+    xs = sorted(samples)
+    if not xs:
+        return {f"p{p}": None for p in points}
+    return {f"p{p}": round(xs[max(0, -(-len(xs) * p // 100) - 1)], 3)
+            for p in points}
+
+
 def bench_timestamp() -> str:
     """Artifact timestamp: the BENCH_TIMESTAMP env var when set (CI pins it
     for reproducible artifacts), else UTC now."""

@@ -1,0 +1,192 @@
+"""Online-serving load generator + SLO benchmark (DESIGN.md §10).
+
+Drives `repro.serve.ImageFilterServer` with a concurrent mixed-shape
+client fleet and measures the request path end to end -- client submit to
+future fulfilment -- under two submission disciplines:
+
+  * **sequential** -- each client waits for its result before submitting
+    the next request, so no coalescing is ever possible: every micro-batch
+    holds one image (the no-serving-layer baseline, same machinery);
+  * **coalesced**  -- each client submits its whole stream and then
+    gathers, so concurrent same-bucket requests ride one (N, H, W)
+    batched `apply_filter` call via the §8 batch fold.
+
+Rows (`serve_*` prefix -> the BENCH_serve.json artifact, emitted through
+the shared `benchmarks.common.emit` schema): per-discipline p50/p95/p99
+latency (ms), throughput (mpix/s), the batch-occupancy histogram and
+flush-trigger counts from `server.stats()`, and the coalesced-vs-
+sequential speedup row the README table splices.
+
+``--smoke`` is the `scripts/check.sh --smoke-serve` guard: coalesced
+throughput must not fall below sequential, coalesced p99 must stay inside
+a generous SLO bound derived from the measured sequential latency (only a
+stall or a lost wakeup trips it), and a served output is spot-checked
+bit-identical against the direct `apply_filter` call.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, percentiles, write_bench_json
+from repro.filters import apply_filter
+from repro.serve import ImageFilterServer, ServerConfig
+
+#: (shape, filter) mix of the load: two buckets per shape family.
+DEFAULT_MIX = (((128, 128), "gaussian5"), ((128, 128), "sobel_x"),
+               ((64, 64), "gaussian3"))
+SMOKE_MIX = (((48, 48), "gaussian3"), ((32, 32), "gaussian3"))
+
+
+def _requests(rng, n: int, mix) -> list[tuple[np.ndarray, str]]:
+    """n deterministic requests cycling through the (shape, filter) mix."""
+    out = []
+    for i in range(n):
+        shape, filt = mix[i % len(mix)]
+        out.append((rng.integers(0, 256, shape).astype(np.int32), filt))
+    return out
+
+
+def run_load(*, coalesce: bool, clients: int, per_client: int, mix,
+             max_batch: int = 8, max_delay_ms: float = 2.0) -> dict:
+    """One load run; returns latencies, throughput and server stats.
+
+    The sequential discipline also zeroes the flush deadline: a lone
+    request then dispatches immediately, so the baseline measures the raw
+    request path, not an artificial `max_delay` sleep per request."""
+    cfg = ServerConfig(max_batch=max_batch,
+                       max_delay_ms=max_delay_ms if coalesce else 0.0,
+                       max_pending=max(64, clients * per_client))
+    rng = np.random.default_rng(0)
+    streams = [_requests(rng, per_client, mix) for _ in range(clients)]
+    latencies_ms: list[float] = []
+    lat_lock = threading.Lock()
+
+    def sequential_client(stream):
+        for img, filt in stream:
+            t0 = time.perf_counter()
+            srv.submit(img, filt).result(300)
+            dt = (time.perf_counter() - t0) * 1e3
+            with lat_lock:
+                latencies_ms.append(dt)
+
+    def coalesced_client(stream):
+        pending = []
+        for img, filt in stream:
+            pending.append((time.perf_counter(), srv.submit(img, filt)))
+        for t0, fut in pending:
+            fut.result(300)
+            dt = (time.perf_counter() - t0) * 1e3
+            with lat_lock:
+                latencies_ms.append(dt)
+
+    with ImageFilterServer(cfg) as srv:
+        shapes = sorted({shape for shape, _ in mix})
+        filters = sorted({filt for _, filt in mix})
+        batches = sorted({1 << k for k in range(max_batch.bit_length())})
+        srv.warmup(shapes, filters, batches=batches)
+        body = sequential_client if not coalesce else coalesced_client
+        threads = [threading.Thread(target=body, args=(s,)) for s in streams]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall_s = time.perf_counter() - t0
+        stats = srv.stats()
+    total_pix = sum(h * w for stream in streams for (img, _) in stream
+                    for (h, w) in [img.shape])
+    assert stats["served"] == clients * per_client, "requests went missing"
+    return {"latencies_ms": latencies_ms, "wall_s": wall_s,
+            "mpix_s": total_pix / wall_s / 1e6, "stats": stats}
+
+
+def _emit_run(name: str, run: dict, **extra) -> None:
+    stats = run["stats"]
+    mean_us = np.mean(run["latencies_ms"]) * 1e3
+    occupancy = ",".join(f"{n}:{c}"
+                         for n, c in sorted(stats["occupancy"].items()))
+    reasons = ",".join(f"{r}:{c}"
+                       for r, c in sorted(stats["flush_reasons"].items()))
+    emit(name, mean_us, mpix_s=round(run["mpix_s"], 3),
+         **percentiles(run["latencies_ms"]), batches=stats["batches"],
+         occupancy=occupancy, flush=reasons, **extra)
+
+
+def bench(*, clients: int, per_client: int, mix, max_batch: int = 8,
+          max_delay_ms: float = 2.0, tag: str = "serve_") -> dict:
+    """The sequential-vs-coalesced pair + the speedup row."""
+    runs = {}
+    for label, coalesce in (("seq", False), ("coalesced", True)):
+        runs[label] = run_load(coalesce=coalesce, clients=clients,
+                               per_client=per_client, mix=mix,
+                               max_batch=max_batch,
+                               max_delay_ms=max_delay_ms)
+        _emit_run(f"{tag}{label}", runs[label], clients=clients,
+                  requests=clients * per_client)
+    emit(f"{tag}coalesce_speedup",
+         runs["coalesced"]["mpix_s"] / runs["seq"]["mpix_s"],
+         "x_vs_sequential_mpix_s")
+    return runs
+
+
+def _identity_spot_check(mix) -> bool:
+    """A served output must be byte-for-byte the direct apply_filter call."""
+    rng = np.random.default_rng(7)
+    (shape, filt) = mix[0]
+    imgs = [rng.integers(0, 256, shape).astype(np.int32) for _ in range(3)]
+    with ImageFilterServer(ServerConfig(max_batch=4,
+                                        max_delay_ms=3600_000)) as srv:
+        futs = [srv.submit(im, filt) for im in imgs]
+        srv.close(drain=True)
+    return all((f.result(60) == np.asarray(apply_filter(im, filt))).all()
+               for im, f in zip(imgs, futs))
+
+
+def smoke(threshold: float = 1.0) -> int:
+    """Reduced-size serving guards (scripts/check.sh --smoke-serve)."""
+    rc = 0
+    runs = bench(clients=4, per_client=8, mix=SMOKE_MIX, max_batch=8,
+                 max_delay_ms=2.0, tag="smoke_serve_")
+    speedup = runs["coalesced"]["mpix_s"] / runs["seq"]["mpix_s"]
+    print(f"# smoke-serve: coalesced {speedup:.2f}x sequential mpix/s "
+          f"(threshold {threshold}x)")
+    if speedup < threshold:
+        print("# FAIL: micro-batching is slower than sequential submission")
+        rc = 1
+    # SLO bound: worst case a request waits out the flush deadline plus a
+    # few sequential-rate batches; 20x the measured sequential mean is far
+    # above that, so only a stall/lost-wakeup regression trips this.
+    seq_mean_ms = float(np.mean(runs["seq"]["latencies_ms"]))
+    bound_ms = 2.0 + 20 * seq_mean_ms
+    p99 = percentiles(runs["coalesced"]["latencies_ms"])["p99"]
+    print(f"# smoke-serve: coalesced p99 {p99:.1f} ms "
+          f"(bound {bound_ms:.1f} ms)")
+    if p99 > bound_ms:
+        print("# FAIL: coalesced p99 latency exceeds the SLO bound")
+        rc = 1
+    occ = runs["coalesced"]["stats"]["occupancy"]
+    if max(occ) <= 1:
+        print(f"# FAIL: coalesced run never batched (occupancy {occ})")
+        rc = 1
+    if not _identity_spot_check(SMOKE_MIX):
+        print("# FAIL: served output differs from direct apply_filter")
+        rc = 1
+    else:
+        print("# smoke-serve: served == direct apply_filter (bit-identical)")
+    return rc
+
+
+def main() -> None:
+    bench(clients=4, per_client=16, mix=DEFAULT_MIX, max_batch=8,
+          max_delay_ms=2.0)
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        sys.exit(smoke())
+    main()
+    write_bench_json("BENCH_serve.json", prefix="serve_")

@@ -4,7 +4,7 @@ every bank filter with every multiplier, PSNR per (filter, multiplier).
 
     PYTHONPATH=src python examples/gaussian_filter_fingerprint.py \
         [--noise 20] [--batch 4] [--filters gaussian3,sobel_x] [--size 128] \
-        [--exec local|sharded|streamed] [--devices N]
+        [--exec local|sharded|streamed] [--devices N] [--serve]
 
 Part 1 reproduces the paper's own 3x3 Gaussian experiment (Fig. 9 table);
 part 2 runs the bank (repro.filters, DESIGN.md §5) under the chosen
@@ -13,6 +13,12 @@ the batch over a host-device mesh (asserted bit-identical to local),
 `--exec streamed` walks the images in out-of-core tiles. For each filter
 the error-free REFMLM output must be bit-identical to the exact
 multiplier's.
+
+`--serve` additionally pushes the same fingerprint workload through the
+online serving queue (repro.serve, DESIGN.md §10): every (image, filter,
+multiplier) becomes one request, concurrent same-bucket requests coalesce
+into micro-batches, and every served output is asserted bit-identical to
+the direct `apply_filter` call it replaces.
 """
 import argparse
 import os
@@ -121,6 +127,49 @@ def bank_demo(noise: int, size: int, batch: int, filters: tuple[str, ...],
     print(" [4,8,4] Gaussian and [1,2,1] Sobel rows -- and degrades elsewhere.)")
 
 
+def serve_demo(noise: int, size: int, batch: int, filters: tuple[str, ...],
+               exec_mode: str = "local") -> None:
+    """The fingerprint workload through the serving queue (DESIGN.md §10):
+    one request per (image, filter, multiplier), coalesced by bucket,
+    every output asserted bit-identical to the direct apply_filter call.
+    The queue routes the chosen --exec mode (DESIGN.md §9) unchanged."""
+    from repro.serve import ImageFilterServer, ServerConfig
+
+    if exec_mode == "sharded":
+        import jax
+        if len(jax.devices()) < 2:
+            print("\nonly 1 device visible -- serving with exec=local "
+                  "(pass --devices 8 to shard the served batches)")
+            exec_mode = "local"
+    noisy = [add_salt_pepper(fingerprint((size, size), seed=7 + i), noise,
+                             seed=11 + i).astype(np.int32)
+             for i in range(batch)]
+    print(f"\n=== the same workload, served (repro.serve, {batch} images x "
+          f"{len(filters)} filters x {len(BANK_MULTIPLIERS)} multipliers, "
+          f"exec={exec_mode}) ===")
+    cfg = ServerConfig(max_batch=max(2, batch), max_delay_ms=5.0,
+                       exec=exec_mode, tile=(64, 64))
+    with ImageFilterServer(cfg) as srv:
+        srv.warmup([(size, size)], filters, methods=BANK_MULTIPLIERS,
+                   batches=(max(2, batch),))
+        futs = [(img, name, mult, srv.submit(img, name, method=mult))
+                for name in filters for mult in BANK_MULTIPLIERS
+                for img in noisy]
+        for img, name, mult, fut in futs:
+            direct = np.asarray(apply_filter(img, name, method=mult))
+            assert (fut.result(120) == direct).all(), \
+                f"served {name}/{mult} differs from direct apply_filter"
+        stats = srv.stats()
+    occ = ", ".join(f"n={n}: {c}" for n, c in sorted(stats["occupancy"].items()))
+    print(f"served {stats['served']} requests in {stats['batches']} "
+          f"micro-batches (occupancy {occ})")
+    print(f"flush triggers: {stats['flush_reasons']}; warm-cache "
+          f"hits/misses: {stats['compile']['hits']}/"
+          f"{stats['compile']['misses']}")
+    print("every served output is bit-identical to the direct "
+          "apply_filter call.")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--noise", type=int, default=20, help="salt&pepper %")
@@ -134,11 +183,17 @@ def main():
     ap.add_argument("--devices", type=int, default=None,
                     help="host platform device count for --exec sharded "
                          "(consumed before JAX starts; see _early_device_flag)")
+    ap.add_argument("--serve", action="store_true",
+                    help="also push the workload through the serving queue "
+                         "(repro.serve, DESIGN.md §10)")
     args = ap.parse_args()
 
     paper_experiment(args.noise, args.size)
     bank_demo(args.noise, min(args.size, 128), args.batch,
               tuple(args.filters.split(",")), args.exec_mode)
+    if args.serve:
+        serve_demo(args.noise, min(args.size, 128), args.batch,
+                   tuple(args.filters.split(",")), args.exec_mode)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Repo check: tier-1 test suite + documentation-link lint + perf smoke.
 #
-#   scripts/check.sh            run everything
-#   scripts/check.sh --lint     doc-link lint only (fast)
+#   scripts/check.sh                run everything
+#   scripts/check.sh --lint         doc-link lint only (fast)
+#   scripts/check.sh --smoke-serve  serving SLO guard only (DESIGN.md §10)
 #
 # The perf smoke runs benchmarks/kernel_bench.py --smoke on a reduced size
 # and fails if (a) the KCM constant-coefficient path is slower than the
@@ -15,6 +16,12 @@
 # platform devices and fails if sharded/streamed output ever differs from
 # local, or if sharded n=32 throughput falls below local n=32 on a guarded
 # filter (the DESIGN.md §9 scale-out guard).
+#
+# The serving smoke (--smoke-serve, benchmarks/serve_bench.py --smoke) is
+# the DESIGN.md §10 guard: coalesced micro-batching must not run slower
+# than sequential submission, coalesced p99 latency must stay inside the
+# SLO bound, the coalesced run must actually batch, and a served output is
+# spot-checked bit-identical to the direct apply_filter call.
 #
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
@@ -49,6 +56,11 @@ print(f"doc-link lint OK: {refs} DESIGN.md §-references resolve "
 EOF
 }
 
+if [[ "${1:-}" == "--smoke-serve" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke
+  exit 0
+fi
+
 lint
 if [[ "${1:-}" == "--lint" ]]; then
   exit 0
@@ -63,3 +75,6 @@ echo "== multi-device smoke (kernel_bench --smoke-dist, 8 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.kernel_bench --smoke-dist
+
+echo "== serving smoke (serve_bench --smoke) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke

@@ -1,13 +1,16 @@
 #!/usr/bin/env python
-"""Regenerate the README "Performance" table from BENCH_kernels.json.
+"""Regenerate the README "Performance" table from BENCH_kernels.json +
+BENCH_serve.json.
 
-    PYTHONPATH=src python -m benchmarks.run        # writes BENCH_kernels.json
+    PYTHONPATH=src python -m benchmarks.run        # writes both artifacts
     python scripts/update_perf_table.py            # splices the README table
 
 The table is the curated DESIGN.md §7/§8 before/after story (recursion vs
 KCM, two-pass vs fused, separable vs direct, serial batch axis vs
-batch-folded parallel grid); the full row set stays in the JSON artifact.
-Content between the BENCH_TABLE markers is owned by this script.
+batch-folded parallel grid) plus the §10 serving rows (sequential vs
+coalesced submission under the mixed-shape load generator); the full row
+set stays in the JSON artifacts. Content between the BENCH_TABLE markers
+is owned by this script.
 """
 from __future__ import annotations
 
@@ -41,6 +44,10 @@ ROWS = [
      "5×5 Gaussian, refmlm, batch n=32, **exec=sharded** (8-device mesh, §9)"),
     ("kernel_dist_gaussian5_streamed_n32",
      "5×5 Gaussian, refmlm, batch n=32, exec=streamed (out-of-core 64×64 tiles, §9)"),
+    ("serve_seq",
+     "online serving, 4-client mixed load, sequential submission (µs = mean request latency)"),
+    ("serve_coalesced",
+     "online serving, 4-client mixed load, **coalesced micro-batching** (§10)"),
 ]
 SPEEDUPS = [
     ("kernel_bank_gaussian5_kcm_speedup", "KCM vs recursion"),
@@ -48,13 +55,15 @@ SPEEDUPS = [
     ("kernel_bank_gaussian3_fold_speedup", "batch fold vs serial batch (n=8)"),
     ("kernel_bank_gaussian3_batch_scaling", "n=8 vs n=1 throughput"),
     ("kernel_dist_gaussian5_sharded_speedup", "sharded vs local (n=32, §9)"),
+    ("serve_coalesce_speedup",
+     "coalesced vs sequential serving throughput (§10)"),
 ]
 
 
 def build_table(bench: dict) -> str:
     missing = [n for n, _ in (*ROWS, *SPEEDUPS) if n not in bench]
     if missing:
-        raise SystemExit(f"BENCH_kernels.json is missing rows {missing} -- "
+        raise SystemExit(f"perf artifacts are missing rows {missing} -- "
                          "stale or partial artifact; rerun the benchmarks "
                          "(the kernel_dist_*_sharded rows need the process "
                          "started with "
@@ -76,13 +85,15 @@ def build_table(bench: dict) -> str:
 
 
 def main() -> int:
-    bench_path = ROOT / "BENCH_kernels.json"
     readme_path = ROOT / "README.md"
-    if not bench_path.exists():
-        print("BENCH_kernels.json missing -- run `python -m benchmarks.run` "
-              "(or `python -m benchmarks.kernel_bench`) first", file=sys.stderr)
-        return 1
-    bench = json.loads(bench_path.read_text())
+    bench = {}
+    for fname in ("BENCH_kernels.json", "BENCH_serve.json"):
+        path = ROOT / fname
+        if not path.exists():
+            print(f"{fname} missing -- run `python -m benchmarks.run` "
+                  "first (it writes both artifacts)", file=sys.stderr)
+            return 1
+        bench.update(json.loads(path.read_text()))
     readme = readme_path.read_text()
     if START not in readme or END not in readme:
         print("README.md is missing the BENCH_TABLE markers", file=sys.stderr)

@@ -18,7 +18,10 @@ The one-call entry point mirrors the local pipeline:
     distribute.apply_filter(imgs, "gaussian5", exec="sharded")   # mesh
     distribute.apply_filter(big, "gaussian5", exec="streamed")   # tiles
 
-which is the same routing as `repro.filters.apply_filter(..., exec=...)`.
+which is the same routing as `repro.filters.apply_filter(..., exec=...)`,
+and the routing the serving layer (`repro.serve`, DESIGN.md §10) rides:
+a micro-batch whose bucket carries exec='sharded'|'streamed' dispatches
+through these wrappers unchanged, bit-identical to local by §9.
 """
 from __future__ import annotations
 

@@ -27,7 +27,13 @@ from repro.filters.conv import (
     fused_separable_pass,
     tap_multiplier,
 )
-from repro.filters.pipeline import EXEC_MODES, apply_filter, filter_bank_apply
+from repro.filters.pipeline import (
+    EXEC_MODES,
+    apply_filter,
+    apply_filter_batch,
+    filter_bank_apply,
+    resolve_filter_blocks,
+)
 
 __all__ = [
     "EXEC_MODES",
@@ -37,11 +43,13 @@ __all__ = [
     "MULT_IMPLS",
     "FilterSpec",
     "apply_filter",
+    "apply_filter_batch",
     "choose_block_rows",
     "conv2d_pass",
     "filter_bank_apply",
     "fused_separable_pass",
     "gaussian_kernel_1d",
     "get_filter",
+    "resolve_filter_blocks",
     "tap_multiplier",
 ]

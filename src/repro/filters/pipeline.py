@@ -181,6 +181,84 @@ def apply_filter(
     return _restore(out, orig)
 
 
+def resolve_filter_blocks(
+    filt: FilterSpec | str,
+    n: int,
+    h: int,
+    w: int,
+    *,
+    method: str = "refmlm",
+    mult_impl: str = "auto",
+    separable: bool | None = None,
+    fused: bool | None = None,
+) -> "BlockConfig":
+    """The grid organization `apply_filter` would resolve for an (n, h, w)
+    batch of `filt` -- dataflow kind, tap extents and resolved mult_impl
+    included, one `repro.tuning.resolve_blocks` consult total.
+
+    This is the serving layer's per-bucket memoisation hook (DESIGN.md
+    §10): resolve once per (bucket, coalesced batch size), then pin the
+    fields explicitly on every `apply_filter` dispatch so the steady-state
+    hot path does no cache re-resolution (explicit values win and
+    short-circuit the lookup). Outputs are bit-identical across grid
+    organizations (§8), so pinning is throughput-only. Note `block_cols`
+    is returned in the cache's vocabulary: None means full width, which
+    pins explicitly as `block_cols=w`.
+    """
+    from repro.filters.conv import _resolve_mult_impl
+    from repro.tuning import resolve_blocks_cached
+
+    spec = get_filter(filt) if isinstance(filt, str) else filt
+    separable = spec.separable if separable is None else separable
+    fused = separable if fused is None else fused
+    if fused and separable:
+        kind = "fused"
+        kh, kw = len(spec.sep_col), len(spec.sep_row)
+        impl = _resolve_mult_impl(mult_impl, spec.sep_row, spec.sep_col)
+    else:
+        kind = "direct"
+        kh, kw = np.shape(spec.taps)
+        impl = _resolve_mult_impl(mult_impl, spec.taps)
+    return resolve_blocks_cached(kind, n, h, w, kh, kw, impl)
+
+
+def apply_filter_batch(
+    imgs: "list[np.ndarray]",
+    filt: FilterSpec | str,
+    *,
+    pad_to: int | None = None,
+    **kw,
+) -> "list[np.ndarray]":
+    """Coalesce same-shape single images into one (N, H, W) `apply_filter`
+    call and split the output back per image -- the serving layer's batch
+    merge/split hook (DESIGN.md §10).
+
+    `pad_to` zero-pads the batch axis up to a fixed traced size (the
+    serve executor's power-of-two batch rounding, which bounds the number
+    of compiled executables per bucket); pad images are dropped from the
+    returned list. Each returned output is bit-identical to the
+    single-image `apply_filter` call -- the §8 batch fold embeds every
+    image's own zero halo, so batch neighbors (and zero pads) can never
+    leak into a request's pixels (asserted in tests/test_serve.py).
+    """
+    if not imgs:
+        return []
+    shape = np.shape(imgs[0])
+    for im in imgs[1:]:
+        if np.shape(im) != shape:
+            raise ValueError(f"apply_filter_batch needs uniform shapes; got "
+                             f"{np.shape(im)} alongside {shape}")
+    if len(shape) != 2:
+        raise ValueError(f"expected (H, W) images, got shape {shape}")
+    n = len(imgs)
+    batch = np.stack([np.asarray(im) for im in imgs]).astype(np.int32)
+    if pad_to is not None and pad_to > n:
+        batch = np.concatenate(
+            [batch, np.zeros((pad_to - n, *shape), np.int32)])
+    out = np.asarray(apply_filter(batch, filt, **kw))
+    return [out[i] for i in range(n)]
+
+
 def filter_bank_apply(
     imgs: Array,
     filters: tuple[str, ...] | None = None,
@@ -194,4 +272,5 @@ def filter_bank_apply(
             for name in names}
 
 
-__all__ = ["EXEC_MODES", "apply_filter", "filter_bank_apply"]
+__all__ = ["EXEC_MODES", "apply_filter", "apply_filter_batch",
+           "filter_bank_apply", "resolve_filter_blocks"]

@@ -1,0 +1,60 @@
+"""`repro.serve` -- online image-filter serving on the REFMLM datapath
+(DESIGN.md §10): a request queue with admission control, a shape-bucketed
+micro-batcher coalescing concurrent same-shape requests into one batched
+`apply_filter` call (riding the §8 batch fold), exec-mode routing through
+`repro.distribute` (§9), and a warm-start compile cache.
+
+Layers:
+  request.py   -- `FilterRequest` / `FilterFuture`, the coalescing
+                  `bucket_key` and the warm-cache `serve_key`;
+  admission.py -- in-flight bound + backpressure (`AdmissionGate`,
+                  `ServerOverloaded`);
+  batcher.py   -- the pure flush-policy state machine
+                  (`ShapeBucketedBatcher`: size / deadline / drain);
+  executor.py  -- micro-batch -> `apply_filter_batch` dispatch with the
+                  per-bucket grid-resolution memo and pow-2 batch rounding;
+  server.py    -- `ImageFilterServer` (worker thread, `submit`, stats);
+  warmup.py    -- `python -m repro.serve.warmup` deploy-time pre-compiler.
+
+    from repro.serve import ImageFilterServer, ServerConfig
+    with ImageFilterServer(ServerConfig(max_batch=8)) as srv:
+        fut = srv.submit(img, "gaussian5", method="refmlm")
+        out = fut.result()   # bit-identical to apply_filter(img, ...)
+
+The load-bearing guarantee is paper faithfulness end to end: a request's
+output is bit-identical no matter which coalesced batch, bucket, or exec
+mode served it (tests/test_serve.py).
+"""
+from __future__ import annotations
+
+from repro.serve.admission import (
+    AdmissionGate,
+    ServerClosed,
+    ServerOverloaded,
+)
+from repro.serve.batcher import FLUSH_REASONS, MicroBatch, ShapeBucketedBatcher
+from repro.serve.executor import BatchExecutor, next_pow2
+from repro.serve.request import (
+    FilterFuture,
+    FilterRequest,
+    bucket_key,
+    serve_key,
+)
+from repro.serve.server import ImageFilterServer, ServerConfig
+
+__all__ = [
+    "FLUSH_REASONS",
+    "AdmissionGate",
+    "BatchExecutor",
+    "FilterFuture",
+    "FilterRequest",
+    "ImageFilterServer",
+    "MicroBatch",
+    "ServerClosed",
+    "ServerConfig",
+    "ServerOverloaded",
+    "ShapeBucketedBatcher",
+    "bucket_key",
+    "next_pow2",
+    "serve_key",
+]

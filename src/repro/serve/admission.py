@@ -1,0 +1,72 @@
+"""Admission control for the serving queue (DESIGN.md §10).
+
+The gate bounds the number of *in-flight* requests -- admitted but not yet
+completed -- so a traffic burst turns into client-side backpressure
+(`submit` blocking, then `ServerOverloaded`) instead of unbounded queue
+growth. A slot is held from admission until the request's future is
+fulfilled, so the bound covers queued AND executing work: the server's
+peak memory is `max_pending` images plus one micro-batch.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+
+class ServerOverloaded(RuntimeError):
+    """Admission timed out: the server is at `max_pending` in-flight
+    requests and none completed within the admission timeout."""
+
+
+class ServerClosed(RuntimeError):
+    """Submission after `close()` -- the worker is no longer flushing."""
+
+
+class AdmissionGate:
+    """Counting gate over in-flight requests with a bounded blocking wait."""
+
+    def __init__(self, max_pending: int, timeout_s: float,
+                 clock=time.monotonic) -> None:
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = int(max_pending)
+        self.timeout_s = float(timeout_s)
+        self._clock = clock
+        self._cond = threading.Condition()
+        self._inflight = 0
+        self._rejected = 0
+
+    @property
+    def inflight(self) -> int:
+        with self._cond:
+            return self._inflight
+
+    @property
+    def rejected(self) -> int:
+        with self._cond:
+            return self._rejected
+
+    def acquire(self, timeout: float | None = None) -> None:
+        """Take one in-flight slot, blocking up to `timeout` (None = the
+        gate's default). Raises `ServerOverloaded` when no slot frees up."""
+        timeout = self.timeout_s if timeout is None else float(timeout)
+        deadline = self._clock() + timeout
+        with self._cond:
+            while self._inflight >= self.max_pending:
+                remaining = deadline - self._clock()
+                if remaining <= 0 or not self._cond.wait(remaining):
+                    self._rejected += 1
+                    raise ServerOverloaded(
+                        f"{self._inflight} requests in flight >= max_pending="
+                        f"{self.max_pending} for {timeout:.3f}s")
+            self._inflight += 1
+
+    def release(self, n: int = 1) -> None:
+        """Free `n` slots (their requests' futures were fulfilled)."""
+        with self._cond:
+            self._inflight -= n
+            assert self._inflight >= 0, "admission gate over-released"
+            self._cond.notify_all()
+
+
+__all__ = ["AdmissionGate", "ServerClosed", "ServerOverloaded"]

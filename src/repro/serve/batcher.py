@@ -1,0 +1,102 @@
+"""Shape-bucketed micro-batcher (DESIGN.md §10).
+
+Pure flush-policy state machine, deliberately free of threads and locks:
+the server drives it under its own condition variable, and tests drive it
+with a fake clock. Requests land in per-`bucket_key` FIFO queues -- one
+bucket per (H, W) × filter × method × mult_impl × exec × nbits, the set of
+fields one `apply_filter` call can serve -- and a bucket flushes as one
+`MicroBatch` when either trigger fires:
+
+  * **size**     -- the bucket holds `max_batch` requests: pop exactly
+                    `max_batch`, leaving any remainder with its original
+                    arrival times (a hot bucket flushes continuously);
+  * **deadline** -- the *oldest* request has waited `max_delay_s`: pop up
+                    to `max_batch` (latency floor under light traffic);
+  * **drain**    -- shutdown or an explicit flush: pop everything.
+
+Exactly-once by construction: a request lives in exactly one bucket queue
+until it is popped into exactly one `MicroBatch` (asserted under
+concurrent mixed-shape load in tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from typing import Callable, NamedTuple
+
+from repro.serve.request import FilterRequest
+
+FLUSH_REASONS = ("size", "deadline", "drain")
+
+
+class MicroBatch(NamedTuple):
+    """One flushed bucket slice, ready for the executor."""
+
+    key: str                         # the shared bucket_key
+    requests: tuple[FilterRequest, ...]
+    reason: str                      # member of FLUSH_REASONS
+
+
+class ShapeBucketedBatcher:
+    """Bucket queues + the two flush triggers. Not thread-safe by design."""
+
+    def __init__(self, max_batch: int, max_delay_s: float,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_delay_s < 0:
+            raise ValueError(f"max_delay_s must be >= 0, got {max_delay_s}")
+        self.max_batch = int(max_batch)
+        self.max_delay_s = float(max_delay_s)
+        self.clock = clock
+        # insertion-ordered so equal deadlines flush in arrival order
+        self._buckets: OrderedDict[str, deque[FilterRequest]] = OrderedDict()
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._buckets.values())
+
+    def add(self, req: FilterRequest) -> str:
+        """Queue one admitted request; returns its bucket key."""
+        key = req.key
+        self._buckets.setdefault(key, deque()).append(req)
+        return key
+
+    def _pop(self, key: str, count: int, reason: str) -> MicroBatch:
+        q = self._buckets[key]
+        batch = tuple(q.popleft() for _ in range(min(count, len(q))))
+        if not q:
+            del self._buckets[key]
+        return MicroBatch(key, batch, reason)
+
+    def ready(self, now: float | None = None) -> list[MicroBatch]:
+        """All batches whose size or deadline trigger has fired at `now`."""
+        now = self.clock() if now is None else now
+        out = []
+        for key in list(self._buckets):
+            while key in self._buckets:
+                q = self._buckets[key]
+                if len(q) >= self.max_batch:
+                    out.append(self._pop(key, self.max_batch, "size"))
+                elif now - q[0].submitted >= self.max_delay_s:
+                    out.append(self._pop(key, self.max_batch, "deadline"))
+                else:
+                    break
+        return out
+
+    def next_deadline(self) -> float | None:
+        """Earliest future instant a deadline trigger can fire (the server's
+        sleep bound), or None when nothing is pending."""
+        oldest = [q[0].submitted for q in self._buckets.values()]
+        return min(oldest) + self.max_delay_s if oldest else None
+
+    def drain(self) -> list[MicroBatch]:
+        """Flush every bucket regardless of triggers (shutdown path)."""
+        out = []
+        for key in list(self._buckets):
+            while key in self._buckets:
+                out.append(self._pop(key, self.max_batch, "drain"))
+        return out
+
+
+__all__ = ["FLUSH_REASONS", "MicroBatch", "ShapeBucketedBatcher"]

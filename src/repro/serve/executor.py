@@ -1,0 +1,159 @@
+"""Micro-batch executor: flushed buckets -> the filter datapath
+(DESIGN.md §10).
+
+One `MicroBatch` becomes one `apply_filter_batch` call: the bucket's
+requests stack into an (N, H, W) batch that rides the §8 batch fold, runs
+under the bucket's execution mode ('local' | 'sharded' | 'streamed', §9),
+and splits back per request. Bit-exactness end to end is inherited, not
+re-argued: the batch fold embeds each image's own zero halo and every
+exec mode is bit-identical to local, so a request's output is the same
+bytes no matter which coalesced batch, bucket, or exec mode served it
+(asserted in tests/test_serve.py).
+
+Two steady-state amortisations:
+
+  * **per-bucket grid resolution** -- the `BlockConfig` winner for a
+    (bucket, traced batch size) is resolved once via
+    `repro.filters.resolve_filter_blocks` and pinned explicitly on every
+    dispatch, so the hot path never re-consults the tuning cache
+    (local exec only: sharded/streamed trace shard-/tile-local shapes and
+    must keep their own §9 cache keying);
+  * **power-of-two batch rounding** -- the coalesced batch zero-pads up to
+    the next power of two, bounding compiles per bucket at
+    log2(max_batch)+1 instead of one per distinct occupancy. The
+    `warmed`/`hits`/`misses` ledger keyed by `serve_key` is the
+    warm-start compile cache's bookkeeping: `repro.serve.warmup`
+    pre-populates it (and jax's underlying jit cache) so first-request
+    latency is amortised away.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.filters.pipeline import apply_filter_batch, resolve_filter_blocks
+from repro.serve.batcher import MicroBatch
+from repro.serve.request import FilterRequest, bucket_key, serve_key
+from repro.tuning import cache_generation
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (int(n) - 1)).bit_length()
+
+
+class BatchExecutor:
+    """Stateless-per-request executor with the per-bucket plan memo."""
+
+    def __init__(self, *, interpret: bool | None = None,
+                 pad_pow2: bool = True, devices: int | None = None,
+                 tile: tuple[int, int] = (256, 256),
+                 tile_batch: int = 8) -> None:
+        self.interpret = interpret
+        self.pad_pow2 = pad_pow2
+        self.devices = devices
+        self.tile = tuple(tile)
+        self.tile_batch = int(tile_batch)
+        self._lock = threading.Lock()
+        self._plans: dict[tuple, dict] = {}
+        self._plans_gen = cache_generation()
+        self.warmed: set[str] = set()
+        self.hits = 0
+        self.misses = 0
+
+    # -------------------------------------------------- per-bucket plan memo
+    def _plan(self, filt: str, method: str, mult_impl: str, n: int, h: int,
+              w: int) -> dict:
+        """Explicit grid fields for a local-exec (n, h, w) dispatch of
+        `filt` -- resolved once per (bucket, traced batch size), pinned on
+        every later call (the §10 hot-path memoisation). The memo follows
+        the tuning cache's generation so an `invalidate_cache()` (an
+        autotune store under a running server) drops stale pinned winners
+        instead of serving them for the server's lifetime."""
+        gen = cache_generation()
+        if gen != self._plans_gen:
+            self._plans.clear()
+            self._plans_gen = gen
+        memo_key = (filt, method, mult_impl, n, h, w)
+        plan = self._plans.get(memo_key)
+        if plan is None:
+            cfg = resolve_filter_blocks(filt, n, h, w, method=method,
+                                        mult_impl=mult_impl)
+            plan = {"block_rows": cfg.block_rows,
+                    # None spells "unset" at the apply_filter boundary; a
+                    # full-width tile is pinned as block_cols=w
+                    # (see resolve_blocks)
+                    "block_cols": (w if cfg.block_cols is None
+                                   else cfg.block_cols),
+                    "batch_fold": cfg.batch_fold}
+            self._plans[memo_key] = plan
+        return plan
+
+    def _exec_kw(self, exec_mode: str, filt: str, method: str,
+                 mult_impl: str, n: int, h: int, w: int) -> dict:
+        if exec_mode == "local":
+            return dict(self._plan(filt, method, mult_impl, n, h, w))
+        if exec_mode == "sharded":
+            return {"exec": "sharded", "devices": self.devices}
+        if exec_mode == "streamed":
+            # tiles never exceed the bucket's image -- tiny buckets stream
+            # as one tile instead of erroring on an oversized plan
+            th, tw = min(self.tile[0], h), min(self.tile[1], w)
+            return {"exec": "streamed", "tile": (th, tw),
+                    "tile_batch": self.tile_batch}
+        raise ValueError(f"unknown exec mode {exec_mode!r}")
+
+    # ------------------------------------------------------------- execution
+    def execute(self, key: str, requests: tuple[FilterRequest, ...]
+                ) -> list[np.ndarray]:
+        """Run one coalesced bucket slice; returns one output per request."""
+        r0 = requests[0]
+        h, w = r0.img.shape
+        n = len(requests)
+        traced_n = next_pow2(n) if self.pad_pow2 else n
+        skey = serve_key(key, traced_n)
+        with self._lock:
+            if skey in self.warmed:
+                self.hits += 1
+            else:
+                self.misses += 1
+                self.warmed.add(skey)
+        kw = self._exec_kw(r0.exec, r0.filt, r0.method, r0.mult_impl,
+                           traced_n, h, w)
+        return apply_filter_batch(
+            [r.img for r in requests], r0.filt, pad_to=traced_n,
+            method=r0.method, mult_impl=r0.mult_impl, nbits=r0.nbits,
+            interpret=self.interpret, **kw)
+
+    def run(self, batch: MicroBatch) -> None:
+        """Execute and fulfil -- every future resolves exactly once, to its
+        own request's output or to the batch's failure."""
+        try:
+            outs = self.execute(batch.key, batch.requests)
+        except BaseException as err:                       # noqa: BLE001
+            for req in batch.requests:
+                req.future.set_exception(err)
+            return
+        for req, out in zip(batch.requests, outs):
+            req.future.set_result(out)
+
+    # ---------------------------------------------------------------- warmup
+    def warm(self, shape: tuple[int, int], filt: str, *,
+             method: str = "refmlm", mult_impl: str = "auto",
+             exec_mode: str = "local", nbits: int = 8, n: int = 1) -> str:
+        """Pre-compile one (bucket, batch size) point with a zero dummy
+        batch; returns the serve_key it warmed."""
+        h, w = shape
+        traced_n = next_pow2(n) if self.pad_pow2 else n
+        key = bucket_key(filt, method, mult_impl, exec_mode, nbits, h, w)
+        kw = self._exec_kw(exec_mode, filt, method, mult_impl, traced_n, h, w)
+        apply_filter_batch([np.zeros((h, w), np.int32)] * traced_n, filt,
+                           method=method, mult_impl=mult_impl, nbits=nbits,
+                           interpret=self.interpret, **kw)
+        skey = serve_key(key, traced_n)
+        with self._lock:
+            self.warmed.add(skey)
+        return skey
+
+
+__all__ = ["BatchExecutor", "next_pow2"]

@@ -1,0 +1,93 @@
+"""Request/response vocabulary of the serving layer (DESIGN.md §10).
+
+A `FilterRequest` is one client image plus its full datapath routing --
+the bank filter, multiplier method, tap-product implementation, pixel
+width and execution mode. The micro-batcher coalesces concurrent requests
+whose `bucket_key` agrees -- same (H, W) and same routing -- into one
+(N, H, W) batch riding the §8 batch fold, so the key names exactly the
+fields that must match for two requests to share one `apply_filter` call
+(and one compiled executable). Results come back through a `FilterFuture`.
+
+`serve_key` extends a bucket key with the coalesced batch size: it is the
+warm-start compile-cache key, the serving analogue of
+`repro.tuning.config_key` (shape bucket × filter × mult_impl × exec, plus
+the padded N the executable actually traces with).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+
+def bucket_key(filt: str, method: str, mult_impl: str, exec_mode: str,
+               nbits: int, h: int, w: int) -> str:
+    """Coalescing key: requests sharing it may ride one micro-batch."""
+    return f"{filt}/{method}/{mult_impl}/{exec_mode}/b{nbits}/{h}x{w}"
+
+
+def serve_key(bucket: str, n: int) -> str:
+    """Warm compile-cache key: one per (bucket, traced batch size)."""
+    return f"{bucket}/n{n}"
+
+
+class FilterFuture:
+    """Synchronous future fulfilled by the server's worker thread.
+
+    Exactly one of `set_result` / `set_exception` is ever called (the
+    batcher's exactly-once guarantee, asserted in tests/test_serve.py);
+    `result()` blocks until then and re-raises any server-side failure.
+    """
+
+    __slots__ = ("_event", "_value", "_error")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._value: np.ndarray | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def set_result(self, value: np.ndarray) -> None:
+        assert not self._event.is_set(), "future fulfilled twice"
+        self._value = value
+        self._event.set()
+
+    def set_exception(self, err: BaseException) -> None:
+        assert not self._event.is_set(), "future fulfilled twice"
+        self._error = err
+        self._event.set()
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError("filter request still pending")
+        if self._error is not None:
+            raise self._error
+        assert self._value is not None
+        return self._value
+
+
+@dataclasses.dataclass
+class FilterRequest:
+    """One admitted request: the image, its routing, and its future."""
+
+    img: np.ndarray              # (H, W) grayscale, any integer dtype
+    filt: str
+    method: str
+    mult_impl: str
+    exec: str
+    nbits: int
+    future: FilterFuture
+    submitted: float             # admission clock() -- the flush deadline base
+    seq: int                     # admission order (FIFO within a bucket)
+
+    @property
+    def key(self) -> str:
+        h, w = self.img.shape
+        return bucket_key(self.filt, self.method, self.mult_impl, self.exec,
+                          self.nbits, h, w)
+
+
+__all__ = ["FilterFuture", "FilterRequest", "bucket_key", "serve_key"]

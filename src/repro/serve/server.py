@@ -1,0 +1,209 @@
+"""`ImageFilterServer` -- the online serving loop (DESIGN.md §10).
+
+One worker thread owns all device dispatch; client threads only validate,
+stack and wait. `submit()` admits a request through the backpressure gate
+(`repro.serve.admission`), drops it into the shape-bucketed micro-batcher
+(`repro.serve.batcher`) and returns a `FilterFuture`; the worker sleeps
+until the earliest bucket deadline (or a size trigger's notify), flushes
+every ready bucket through the `BatchExecutor`, and fulfils the futures.
+Admission slots are held until fulfilment, so `max_pending` bounds queued
+plus executing work.
+
+    with ImageFilterServer(ServerConfig(max_batch=8)) as srv:
+        srv.warmup(shapes=[(128, 128)], filters=["gaussian5"])
+        fut = srv.submit(img, "gaussian5", method="refmlm")
+        out = fut.result()          # bit-identical to apply_filter(img, ...)
+
+`stats()` reports the served/batch counters, the batch-occupancy
+histogram, flush-trigger counts and the warm compile-cache hit ledger --
+the observability surface the serve benchmark and the `--smoke-serve`
+guard read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.filters.bank import get_filter
+from repro.filters.conv import MULT_IMPLS
+from repro.filters.pipeline import EXEC_MODES
+from repro.serve.admission import AdmissionGate, ServerClosed
+from repro.serve.batcher import MicroBatch, ShapeBucketedBatcher
+from repro.serve.executor import BatchExecutor
+from repro.serve.request import FilterFuture, FilterRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Serving policy knobs (flush triggers, backpressure, exec routing)."""
+
+    max_batch: int = 8              # size flush trigger / occupancy ceiling
+    max_delay_ms: float = 2.0       # deadline flush trigger (oldest wait)
+    max_pending: int = 256          # admission gate: in-flight request bound
+    admission_timeout_s: float = 10.0
+    pad_pow2: bool = True           # round traced batch up to a power of two
+    exec: str = "local"             # default execution mode (DESIGN.md §9)
+    interpret: bool | None = None   # backend autodetect, like apply_filter
+    devices: int | None = None      # sharded-exec mesh size (None = all)
+    tile: tuple[int, int] = (256, 256)   # streamed-exec tile shape
+    tile_batch: int = 8
+
+
+class ImageFilterServer:
+    """Shape-bucketed micro-batching server over the REFMLM datapath."""
+
+    def __init__(self, config: ServerConfig | None = None, *,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.config = config or ServerConfig()
+        if self.config.exec not in EXEC_MODES:
+            raise ValueError(f"exec must be one of {EXEC_MODES}, got "
+                             f"{self.config.exec!r}")
+        self._clock = clock
+        self._gate = AdmissionGate(self.config.max_pending,
+                                   self.config.admission_timeout_s, clock)
+        self._batcher = ShapeBucketedBatcher(
+            self.config.max_batch, self.config.max_delay_ms / 1e3, clock)
+        self._executor = BatchExecutor(
+            interpret=self.config.interpret, pad_pow2=self.config.pad_pow2,
+            devices=self.config.devices, tile=self.config.tile,
+            tile_batch=self.config.tile_batch)
+        self._cond = threading.Condition()
+        self._seq = 0
+        self._closing = False
+        self._stats = {"submitted": 0, "served": 0, "failed": 0,
+                       "batches": 0, "occupancy": {}, "flush_reasons": {}}
+        self._worker = threading.Thread(target=self._loop,
+                                        name="repro-serve-worker", daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------ client API
+    def submit(self, img, filt: str, *, method: str = "refmlm",
+               mult_impl: str = "auto", nbits: int = 8,
+               exec: str | None = None,
+               timeout: float | None = None) -> FilterFuture:
+        """Admit one (H, W) grayscale image; returns its `FilterFuture`.
+
+        Validation happens here, on the client thread, so a bad request
+        fails fast instead of poisoning a coalesced batch: the filter name
+        must exist, `exec` must be a §9 mode, `mult_impl` a known
+        tap-product implementation, and the image a single 2-D (or
+        (H, W, 1)) frame. Blocks while the server is at `max_pending`
+        in-flight requests (up to `timeout`, then `ServerOverloaded`).
+        """
+        exec_mode = self.config.exec if exec is None else exec
+        if exec_mode not in EXEC_MODES:
+            raise ValueError(f"exec must be one of {EXEC_MODES}, got "
+                             f"{exec_mode!r}")
+        if mult_impl not in MULT_IMPLS:
+            raise ValueError(f"mult_impl must be one of {MULT_IMPLS}, got "
+                             f"{mult_impl!r}")
+        get_filter(filt)                     # unknown names fail fast
+        arr = np.asarray(img)
+        if arr.ndim == 3 and arr.shape[-1] == 1:
+            arr = arr[..., 0]
+        if arr.ndim != 2:
+            raise ValueError(f"expected one (H, W) image per request, got "
+                             f"shape {arr.shape}")
+        if self._closing:
+            raise ServerClosed("server is closed")
+        self._gate.acquire(timeout)
+        future = FilterFuture()
+        with self._cond:
+            if self._closing:
+                self._gate.release()
+                raise ServerClosed("server is closed")
+            self._seq += 1
+            req = FilterRequest(img=arr, filt=filt, method=method,
+                                mult_impl=mult_impl, exec=exec_mode,
+                                nbits=int(nbits), future=future,
+                                submitted=self._clock(), seq=self._seq)
+            self._batcher.add(req)
+            self._stats["submitted"] += 1
+            self._cond.notify_all()
+        return future
+
+    def warmup(self, shapes, filters=("gaussian3",), *, methods=("refmlm",),
+               mult_impls=("auto",), execs=None, batches=(1,),
+               nbits: int = 8) -> list[str]:
+        """Pre-compile the cross product of serve points; returns the warmed
+        `serve_key`s (see `repro.serve.warmup` for the CLI)."""
+        from repro.serve.warmup import sweep
+        execs = (self.config.exec,) if execs is None else tuple(execs)
+        return sweep(self._executor, shapes, filters, methods, mult_impls,
+                     execs, batches, nbits=nbits)
+
+    def stats(self) -> dict:
+        """Counters + occupancy histogram + warm-cache ledger (a snapshot)."""
+        with self._cond:
+            snap = {k: (dict(v) if isinstance(v, dict) else v)
+                    for k, v in self._stats.items()}
+        snap["pending"] = self._gate.inflight
+        snap["rejected"] = self._gate.rejected
+        snap["compile"] = {"warmed": len(self._executor.warmed),
+                           "hits": self._executor.hits,
+                           "misses": self._executor.misses}
+        return snap
+
+    def close(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the worker. `drain=True` flushes and serves everything still
+        queued first; `drain=False` fails pending futures with
+        `ServerClosed`."""
+        with self._cond:
+            if self._closing:
+                self._worker.join(timeout)
+                return
+            self._closing = True
+            self._drain = drain
+            self._cond.notify_all()
+        self._worker.join(timeout)
+
+    def __enter__(self) -> "ImageFilterServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=True)
+
+    # ---------------------------------------------------------- worker loop
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                batches = self._batcher.ready(self._clock())
+                while not batches and not self._closing:
+                    deadline = self._batcher.next_deadline()
+                    wait = (None if deadline is None
+                            else max(deadline - self._clock(), 1e-4))
+                    self._cond.wait(wait)
+                    batches = self._batcher.ready(self._clock())
+                if self._closing and not batches:
+                    batches = self._batcher.drain()
+                    if not batches:
+                        return
+                    if not self._drain:
+                        for b in batches:
+                            for req in b.requests:
+                                req.future.set_exception(
+                                    ServerClosed("server closed undrained"))
+                            self._gate.release(len(b.requests))
+                        return
+            for batch in batches:
+                self._run(batch)
+
+    def _run(self, batch: MicroBatch) -> None:
+        self._executor.run(batch)        # fulfils every future exactly once
+        failed = batch.requests[0].future._error is not None
+        with self._cond:
+            self._stats["batches"] += 1
+            occ = self._stats["occupancy"]
+            occ[len(batch.requests)] = occ.get(len(batch.requests), 0) + 1
+            fr = self._stats["flush_reasons"]
+            fr[batch.reason] = fr.get(batch.reason, 0) + 1
+            self._stats["failed" if failed else "served"] += len(
+                batch.requests)
+        self._gate.release(len(batch.requests))
+
+
+__all__ = ["ImageFilterServer", "ServerConfig"]

@@ -14,17 +14,20 @@ from repro.tuning.blocks import (
 )
 from repro.tuning.cache import (
     backend_key,
+    cache_generation,
     cache_path,
     config_key,
     invalidate_cache,
     load_cache,
     resolve_blocks,
+    resolve_blocks_cached,
     store_cache,
 )
 
 __all__ = [
     "BlockConfig",
     "backend_key",
+    "cache_generation",
     "cache_path",
     "choose_block_rows",
     "config_key",
@@ -32,5 +35,6 @@ __all__ = [
     "invalidate_cache",
     "load_cache",
     "resolve_blocks",
+    "resolve_blocks_cached",
     "store_cache",
 ]

@@ -97,9 +97,22 @@ def load_cache(backend: str | None = None) -> dict:
     return _load(str(cache_path(backend)))
 
 
+#: bumped by every invalidate -- downstream memo layers (the serve
+#: executor's per-bucket plans) compare it to drop stale resolutions.
+_GENERATION = 0
+
+
+def cache_generation() -> int:
+    return _GENERATION
+
+
 def invalidate_cache() -> None:
-    """Drop the in-process cache (after writes, or in tests)."""
+    """Drop the in-process caches (after writes, env/backend changes, or in
+    tests) -- both the raw file load and the memoised resolutions."""
+    global _GENERATION
+    _GENERATION += 1
     _load.cache_clear()
+    resolve_blocks_cached.cache_clear()
 
 
 def store_cache(configs: dict, backend: str | None = None) -> pathlib.Path:
@@ -142,6 +155,11 @@ def resolve_blocks(
     width" spelling -- pass `block_cols=w` (a tile as wide as the image
     disables column tiling).
     """
+    if None not in (block_rows, block_cols, batch_fold):
+        # fully explicit call: nothing to look up (the serve hot path, which
+        # pins a memoised per-bucket resolution on every dispatch,
+        # DESIGN.md §10)
+        return BlockConfig(int(block_rows), int(block_cols), bool(batch_fold))
     base: BlockConfig | None = None
     entry = load_cache().get(config_key(kind, n, h, w, kh, kw, mult_impl))
     if entry:
@@ -161,5 +179,22 @@ def resolve_blocks(
     )
 
 
-__all__ = ["backend_key", "cache_path", "config_key", "invalidate_cache",
-           "load_cache", "resolve_blocks", "store_cache"]
+@lru_cache(maxsize=None)
+def resolve_blocks_cached(kind: str, n: int, h: int, w: int, kh: int,
+                          kw: int, mult_impl: str) -> BlockConfig:
+    """Memoised default-field `resolve_blocks` for steady-state dispatch.
+
+    The serving layer (and any other hot loop re-resolving the same
+    (kind, shape, mult_impl) point) pays the JSON-dict lookup and key
+    formatting once; later calls are one dict hit on the memo.
+    `invalidate_cache()` clears this memo together with the file cache, so
+    a `store_cache` write is still visible process-wide. Explicit
+    per-call overrides have no business here -- they bypass the cache
+    entirely via `resolve_blocks`' fully-explicit fast path.
+    """
+    return resolve_blocks(kind, n, h, w, kh, kw, mult_impl)
+
+
+__all__ = ["backend_key", "cache_generation", "cache_path", "config_key",
+           "invalidate_cache", "load_cache", "resolve_blocks",
+           "resolve_blocks_cached", "store_cache"]
