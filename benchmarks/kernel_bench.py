@@ -30,7 +30,11 @@ scripts/check.sh: the KCM path must not lose to the recursion path, and
 batched throughput (n=8) must not fall below single-image throughput for
 any guarded bank filter. ``--smoke-dist`` is the multi-device guard:
 sharded output must be bit-identical to local and sharded n=32 throughput
-must not fall below local n=32 on any guarded filter.
+must not fall below local n=32 on any guarded filter. ``--smoke-tune`` is
+the §11 plan-tuning guard: the committed gaussian5 dataflow winner must
+beat the losing alternatives (within jitter slack) and a pruned replay of
+an exhaustive sweep must keep the same winner while timing strictly fewer
+candidates.
 """
 from __future__ import annotations
 
@@ -40,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn, write_bench_json
-from repro.filters import apply_filter
+from repro.filters import apply_filter, resolve_filter_plan
 from repro.kernels.ops import gaussian_filter, gaussian_kernel_3x3, limb_matmul, lns_matmul
 
 #: bank filters under the batch-scaling smoke guard (n=8 must beat n=1).
@@ -77,6 +81,23 @@ def _bank_variants(imgs, *, tag: str):
          "x_vs_recurse")
     emit(f"kernel_{tag}gaussian5_fused_speedup",
          out["two_pass"] / out["fused"], "x_vs_two_pass")
+    # §11: the default call resolves the committed per-shape plan. Report
+    # it against the best forced row of a *different* dataflow so the
+    # speedup reads "dataflow winner vs best losing alternative" -- ~1.0x
+    # or better whenever the cache still matches this machine (guarded by
+    # scripts/check.sh --smoke-tune).
+    plan = resolve_filter_plan("gaussian5", *imgs.shape, method="refmlm")
+    us = time_fn(lambda x: apply_filter(x, "gaussian5", method="refmlm"),
+                 imgs, iters=3)
+    emit(f"kernel_{tag}gaussian5_dataflow_winner", us,
+         f"mpix_s={npix/us:.2f}", dataflow=plan.dataflow,
+         mult_impl=plan.mult_impl)
+    out["winner"] = us
+    forced = {"direct": "kcm", "two_pass": "two_pass", "fused": "fused"}
+    best_loser = min(out[k] for df, k in forced.items()
+                     if df != plan.dataflow)
+    emit(f"kernel_{tag}gaussian5_winner_speedup", best_loser / us,
+         "x_vs_best_losing_dataflow")
     return out
 
 
@@ -271,10 +292,102 @@ def smoke_dist(threshold: float = 1.0) -> int:
     return rc
 
 
+def smoke_tune(threshold: float = 0.8) -> int:
+    """Plan-tuning guard (scripts/check.sh --smoke-tune, DESIGN.md §11).
+
+    For each --quick sweep shape: (a) time every plan candidate once
+    (exhaustive, prune=False), (b) replay the recorded timings through the
+    pruned sweep and fail if pruning changed the winner, timed as many
+    candidates as the exhaustive pass, or skipped nothing -- the roofline
+    loop may only save time, never flip the winner; (c) fail if the
+    *committed* gaussian5 plan loses to the best measured time of any
+    other dataflow by more than the jitter slack -- the shipped cache must
+    still be the right call on this machine. The 0.8x threshold (after a
+    median-of-5 head-to-head confirmation) deliberately tolerates the
+    (2, 64, 64) shape, where direct and two_pass genuinely tie and trade
+    places run to run, while still catching every real inversion: a wrong
+    dataflow measures 0.4-0.7x at the n=8 shape and a wrong mult_impl
+    ~0.01x. Takes a few minutes: the exhaustive pass times the ~90x
+    slower recursion candidates the real sweep exists to prune.
+    """
+    from repro.tuning import load_plans, plan_key
+    from repro.tuning.autotune import PLAN_QUICK, measure_plan, sweep_plan
+    from repro.tuning.plans import PlanConfig
+
+    plans = load_plans()
+    rc = 0
+    for name, n, h, w in PLAN_QUICK:
+        print(f"# smoke-tune: exhaustive {name} n{n}x{h}x{w} plan sweep "
+              "(every candidate timed once -- this is the slow part)")
+        full, records = sweep_plan(name, n, h, w, iters=1, prune=False,
+                                   verbose=False)
+        timed = dict(records)
+
+        replay, _ = sweep_plan(name, n, h, w, prune=True,
+                               measure_fn=lambda p: timed[p], verbose=False)
+        keys = ("dataflow", "mult_impl", "block_rows", "block_cols",
+                "batch_fold")
+        print(f"# smoke-tune: {name} n{n}x{h}x{w} exhaustive winner "
+              f"{full['dataflow']}/{full['mult_impl']} "
+              f"br={full['block_rows']} bc={full['block_cols']} "
+              f"fold={full['batch_fold']} ({full['us_per_call']}us); pruned "
+              f"replay swept {replay['swept']}/{replay['candidates']} "
+              f"(pruned {replay['pruned']})")
+        if any(replay[k] != full[k] for k in keys):
+            print(f"# FAIL: pruning discarded the measured winner (replay "
+                  f"picked {replay['dataflow']}/{replay['mult_impl']} "
+                  f"br={replay['block_rows']} bc={replay['block_cols']} "
+                  f"fold={replay['batch_fold']})")
+            rc = 1
+        if not (replay["pruned"] > 0
+                and replay["swept"] < replay["candidates"]):
+            print("# FAIL: pruned replay timed every candidate -- the "
+                  "roofline loop is not pruning")
+            rc = 1
+
+        entry = plans.get(plan_key(name, n, h, w))
+        if not entry:
+            print(f"# FAIL: no committed plan for {plan_key(name, n, h, w)} "
+                  "-- regenerate with `python -m repro.tuning.autotune`")
+            rc = 1
+            continue
+        cached = PlanConfig(entry["dataflow"], entry["mult_impl"],
+                            int(entry["block_rows"]), int(entry["block_cols"]),
+                            bool(entry["batch_fold"]))
+        cached_us = timed.get(cached)
+        if cached_us is None:     # cache predates the current candidate grid
+            cached_us = measure_plan(name, cached, n, h, w, iters=1)
+        losers = {p: us for p, us in records if p.dataflow != cached.dataflow}
+        loser_plan = min(losers, key=losers.get)
+        ratio = losers[loser_plan] / cached_us
+        print(f"# smoke-tune: cached {name} n{n}x{h}x{w} winner "
+              f"{cached.dataflow}/{cached.mult_impl} runs {cached_us:.1f}us "
+              f"vs best losing dataflow {losers[loser_plan]:.1f}us "
+              f"({ratio:.2f}x, threshold {threshold}x)")
+        if ratio < threshold:
+            # the exhaustive pass took one iters=1 sample each way; on
+            # shapes where two dataflows genuinely tie that flips on noise,
+            # so confirm head-to-head with medians before failing
+            cached_us = measure_plan(name, cached, n, h, w, iters=5)
+            loser_us = measure_plan(name, loser_plan, n, h, w, iters=5)
+            ratio = loser_us / cached_us
+            print(f"# smoke-tune: head-to-head re-measure (median of 5): "
+                  f"{cached.dataflow} {cached_us:.1f}us vs "
+                  f"{loser_plan.dataflow} {loser_us:.1f}us ({ratio:.2f}x)")
+        if ratio < threshold:
+            print(f"# FAIL: the committed {cached.dataflow} plan loses to "
+                  "another dataflow beyond jitter slack -- regenerate the "
+                  "cache with `python -m repro.tuning.autotune`")
+            rc = 1
+    return rc
+
+
 if __name__ == "__main__":
     if "--smoke" in sys.argv[1:]:
         sys.exit(smoke())
     if "--smoke-dist" in sys.argv[1:]:
         sys.exit(smoke_dist())
+    if "--smoke-tune" in sys.argv[1:]:
+        sys.exit(smoke_tune())
     main()
     write_bench_json()

@@ -4,6 +4,7 @@
 #   scripts/check.sh                run everything
 #   scripts/check.sh --lint         doc-link lint only (fast)
 #   scripts/check.sh --smoke-serve  serving SLO guard only (DESIGN.md §10)
+#   scripts/check.sh --smoke-tune   plan-tuning guard only (DESIGN.md §11)
 #
 # The perf smoke runs benchmarks/kernel_bench.py --smoke on a reduced size
 # and fails if (a) the KCM constant-coefficient path is slower than the
@@ -22,6 +23,14 @@
 # than sequential submission, coalesced p99 latency must stay inside the
 # SLO bound, the coalesced run must actually batch, and a served output is
 # spot-checked bit-identical to the direct apply_filter call.
+#
+# The plan-tuning smoke (--smoke-tune, kernel_bench.py --smoke-tune) is the
+# DESIGN.md §11 guard: the committed gaussian5 dataflow winner must beat
+# the losing alternatives within jitter slack on the smoke shapes, and a
+# pruned replay of an exhaustive plan sweep must select the same winner
+# while timing strictly fewer candidates (pruning may only save time,
+# never flip the winner). Opt-in -- the exhaustive pass times the ~90x
+# slower recursion candidates, so it takes a few minutes.
 #
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
@@ -58,6 +67,11 @@ EOF
 
 if [[ "${1:-}" == "--smoke-serve" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke
+  exit 0
+fi
+
+if [[ "${1:-}" == "--smoke-tune" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kernel_bench --smoke-tune
   exit 0
 fi
 

@@ -8,8 +8,10 @@ BENCH_serve.json.
 The table is the curated DESIGN.md §7/§8 before/after story (recursion vs
 KCM, two-pass vs fused, separable vs direct, serial batch axis vs
 batch-folded parallel grid) plus the §10 serving rows (sequential vs
-coalesced submission under the mixed-shape load generator); the full row
-set stays in the JSON artifacts. Content between the BENCH_TABLE markers
+coalesced submission under the mixed-shape load generator) and the §11
+tuned-plan row (the default call resolving the committed dataflow winner
+against the best losing alternative); the full row set stays in the JSON
+artifacts. Content between the BENCH_TABLE markers
 is owned by this script.
 """
 from __future__ import annotations
@@ -34,6 +36,8 @@ ROWS = [
      "5×5 Gaussian, refmlm, separable, **fused kernel** (VMEM halo band)"),
     ("kernel_bank_gaussian5_direct", "5×5 Gaussian, refmlm, direct (kh·kw taps)"),
     ("kernel_bank_gaussian5_sep", "5×5 Gaussian, refmlm, separable (kh+kw taps)"),
+    ("kernel_bank_gaussian5_dataflow_winner",
+     "5×5 Gaussian, refmlm, **default call = cached plan winner** (§11)"),
     ("kernel_bank_gaussian3_n8_nofold",
      "3×3 Gaussian, refmlm, batch n=8, serial batch axis"),
     ("kernel_bank_gaussian3_n8",
@@ -52,6 +56,8 @@ ROWS = [
 SPEEDUPS = [
     ("kernel_bank_gaussian5_kcm_speedup", "KCM vs recursion"),
     ("kernel_bank_gaussian5_fused_speedup", "fused vs two-pass"),
+    ("kernel_bank_gaussian5_winner_speedup",
+     "tuned plan vs best losing dataflow (§11)"),
     ("kernel_bank_gaussian3_fold_speedup", "batch fold vs serial batch (n=8)"),
     ("kernel_bank_gaussian3_batch_scaling", "n=8 vs n=1 throughput"),
     ("kernel_dist_gaussian5_sharded_speedup", "sharded vs local (n=32, §9)"),

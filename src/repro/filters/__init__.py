@@ -33,6 +33,7 @@ from repro.filters.pipeline import (
     apply_filter_batch,
     filter_bank_apply,
     resolve_filter_blocks,
+    resolve_filter_plan,
 )
 
 __all__ = [
@@ -51,5 +52,6 @@ __all__ = [
     "gaussian_kernel_1d",
     "get_filter",
     "resolve_filter_blocks",
+    "resolve_filter_plan",
     "tap_multiplier",
 ]

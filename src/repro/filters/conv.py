@@ -75,7 +75,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.kcm import METHODS, filter_tables, tables_acc_bound, tap_multiplier
 from repro.core.platform import grid_compiler_params, resolve_interpret
 from repro.tuning import choose_block_rows, resolve_blocks
-from repro.tuning.blocks import round_up
+from repro.tuning.blocks import min_block_cols, min_block_rows, round_up
 
 MULT_IMPLS = ("recurse", "kcm", "auto")
 
@@ -323,7 +323,7 @@ def _dispatch(imgs: Array, call, *, kh: int, kw: int, batch_fold: bool,
     ph, pw = kh // 2, kw // 2
     bc = w if block_cols is None else min(int(block_cols), w)
     tiled = bc < w
-    if tiled and bc < max(2 * pw, 8):
+    if tiled and bc < min_block_cols(kw):
         raise ValueError(f"block_cols={bc} too narrow for a {pw}-column halo")
     if batch_fold and n > 1:
         out = call(_fold_batch(imgs.astype(jnp.int32), ph), bc, tiled)
@@ -535,7 +535,7 @@ def fused_separable_pass(
         if block_rows is not None:      # explicit values win or fail loud
             raise ValueError(f"block_rows={block_rows} too shallow for a "
                              f"{kh // 2}-row halo")
-        cfg = cfg._replace(block_rows=round_up(2 * (kh // 2), 8))
+        cfg = cfg._replace(block_rows=min_block_rows(kh))
     if impl == "kcm":
         rt = _tables_for(method, row, nbits)[0]
         ct = _tables_for(method, col, nbits2)[0]

@@ -36,6 +36,7 @@ from repro.filters.conv import (
     fused_separable_pass,
     second_pass_nbits,
 )
+from repro.tuning.plans import PlanConfig, resolve_plan
 
 
 def _normalize(imgs: Array) -> tuple[Array, tuple[int, ...]]:
@@ -120,17 +121,23 @@ def apply_filter(
 ):
     """Run one bank filter over an image batch through the selected multiplier.
 
-    separable=None picks the two-pass dataflow whenever the spec admits one;
-    force False to compare against the direct KxK window (bit-identical for
-    exact multipliers -- asserted in tests). When separable, fused=None/True
-    runs both 1-D passes in one kernel (DESIGN.md §7); fused=False forces
-    the two-kernel dataflow with its HBM intermediate (the before/after
-    benchmark axis). mult_impl picks the tap-product implementation
-    ('recurse' | 'kcm' | 'auto', see repro.filters.conv); interpret=None
-    autodetects the backend. The grid organization (block_rows, block_cols,
-    batch_fold) defaults through the per-backend autotune cache -- outputs
-    are bit-identical across every organization (DESIGN.md §8, asserted in
-    tests), so these are pure throughput knobs.
+    The execution plan -- dataflow, tap-product implementation and grid
+    organization -- resolves through the per-backend plan cache
+    (DESIGN.md §11): on default arguments a tuned `PlanConfig` for this
+    (filter, batch/image shape) wins, and a cache miss reproduces the
+    fixed pre-plan defaults. Explicit arguments always override.
+    `separable=False` forces the direct KxK window (bit-identical for
+    exact multipliers -- asserted in tests); `separable=True` admits only
+    the two 1-D pass dataflows. Of those, fused=True runs both passes in
+    one kernel (DESIGN.md §7) and fused=False forces the two-kernel
+    dataflow with its HBM intermediate (the before/after benchmark axis).
+    mult_impl pins the tap-product implementation ('recurse' | 'kcm';
+    'auto' defers to the plan, then to the pass-level resolution --
+    see repro.filters.conv); interpret=None autodetects the backend. The
+    grid organization (block_rows, block_cols, batch_fold) defaults
+    through the plan, then the §8 block cache -- outputs are bit-identical
+    across every plan (asserted in tests/test_plan_equivalence.py), so all
+    of these are pure throughput knobs.
 
     `exec` selects the execution mode (DESIGN.md §9): 'local' (default)
     runs on one device and returns a jax Array; 'sharded' distributes over
@@ -167,17 +174,21 @@ def apply_filter(
         raise ValueError("devices/mesh_shape/halo/tile/tile_batch/out "
                          "require exec='sharded' or exec='streamed'")
     spec = get_filter(filt) if isinstance(filt, str) else filt
-    if separable is None:
-        separable = spec.separable
     if separable and not spec.separable:
         raise ValueError(f"filter {spec.name!r} has no separable decomposition")
-    if fused is None:
-        fused = separable
-    if fused and not separable:
+    if fused and (separable is False or not spec.separable):
         raise ValueError("fused=True requires the separable dataflow")
     arr, orig = _normalize(imgs)
-    out = _apply(arr, spec, method, nbits, separable, fused, mult_impl,
-                 block_rows, block_cols, batch_fold, interpret)
+    n, h, w = arr.shape
+    kh, kw = spec.ksize
+    plan = resolve_plan(spec.name, n, h, w, kh, kw,
+                        separable_ok=spec.separable, mult_impl=mult_impl,
+                        separable=separable, fused=fused,
+                        block_rows=block_rows, block_cols=block_cols,
+                        batch_fold=batch_fold)
+    out = _apply(arr, spec, method, nbits, plan.dataflow != "direct",
+                 plan.dataflow == "fused", plan.mult_impl, plan.block_rows,
+                 plan.block_cols, plan.batch_fold, interpret)
     return _restore(out, orig)
 
 
@@ -220,6 +231,67 @@ def resolve_filter_blocks(
         kh, kw = np.shape(spec.taps)
         impl = _resolve_mult_impl(mult_impl, spec.taps)
     return resolve_blocks_cached(kind, n, h, w, kh, kw, impl)
+
+
+def resolve_filter_plan(
+    filt: FilterSpec | str,
+    n: int,
+    h: int,
+    w: int,
+    *,
+    method: str = "refmlm",
+    mult_impl: str = "auto",
+    separable: bool | None = None,
+    fused: bool | None = None,
+) -> PlanConfig:
+    """The fully-concrete execution plan `apply_filter` would run for an
+    (n, h, w) batch of `filt`: dataflow, resolved mult_impl and grid
+    organization, one plan-cache consult total (DESIGN.md §11).
+
+    This is the serving layer's per-bucket memoisation hook (DESIGN.md
+    §10): resolve once per (bucket, coalesced batch size), then pin every
+    field explicitly on each `apply_filter` dispatch so the steady-state
+    hot path takes `resolve_plan`'s fully-explicit fast path and does no
+    cache re-resolution. Fields the plan defers (an untuned shape) are
+    concretized here -- mult_impl through the pass-level staticness
+    resolution, blocks through the §8 block cache of the matching pass
+    kind (a full-width tile pins explicitly as `block_cols=w`). Outputs
+    are bit-identical across plans, so pinning is throughput-only.
+    """
+    from repro.filters.conv import _resolve_mult_impl
+    from repro.tuning import resolve_blocks_cached
+
+    spec = get_filter(filt) if isinstance(filt, str) else filt
+    plan = resolve_plan(spec.name, n, h, w, *spec.ksize,
+                        separable_ok=spec.separable, mult_impl=mult_impl,
+                        separable=separable, fused=fused)
+    if plan.dataflow == "fused":
+        kind = "fused"
+        kh, kw = len(spec.sep_col), len(spec.sep_row)
+        tap_arrays = (spec.sep_row, spec.sep_col)
+    elif plan.dataflow == "two_pass":
+        # the second (column) pass carries the row halo; its §8 entry sizes
+        # the pinned grid when the plan defers
+        kind = "direct"
+        kh, kw = len(spec.sep_col), 1
+        tap_arrays = (spec.sep_row, spec.sep_col)
+    else:
+        kind = "direct"
+        kh, kw = spec.ksize
+        tap_arrays = (spec.taps,)
+    impl = (plan.mult_impl if plan.mult_impl != "auto"
+            else _resolve_mult_impl("auto", *tap_arrays))
+    if None in (plan.block_rows, plan.block_cols, plan.batch_fold):
+        base = resolve_blocks_cached(kind, n, h, w, kh, kw, impl)
+        plan = PlanConfig(
+            plan.dataflow, impl,
+            base.block_rows if plan.block_rows is None else plan.block_rows,
+            (plan.block_cols if plan.block_cols is not None
+             else w if base.block_cols is None else base.block_cols),
+            base.batch_fold if plan.batch_fold is None else plan.batch_fold)
+    else:
+        plan = plan._replace(mult_impl=impl)
+    return plan
 
 
 def apply_filter_batch(
@@ -273,4 +345,5 @@ def filter_bank_apply(
 
 
 __all__ = ["EXEC_MODES", "apply_filter", "apply_filter_batch",
-           "filter_bank_apply", "resolve_filter_blocks"]
+           "filter_bank_apply", "resolve_filter_blocks",
+           "resolve_filter_plan"]

@@ -12,9 +12,10 @@ bytes no matter which coalesced batch, bucket, or exec mode served it
 
 Two steady-state amortisations:
 
-  * **per-bucket grid resolution** -- the `BlockConfig` winner for a
+  * **per-bucket plan resolution** -- the full `PlanConfig` winner
+    (dataflow, mult_impl, grid organization, DESIGN.md §11) for a
     (bucket, traced batch size) is resolved once via
-    `repro.filters.resolve_filter_blocks` and pinned explicitly on every
+    `repro.filters.resolve_filter_plan` and pinned explicitly on every
     dispatch, so the hot path never re-consults the tuning cache
     (local exec only: sharded/streamed trace shard-/tile-local shapes and
     must keep their own §9 cache keying);
@@ -32,7 +33,7 @@ import threading
 
 import numpy as np
 
-from repro.filters.pipeline import apply_filter_batch, resolve_filter_blocks
+from repro.filters.pipeline import apply_filter_batch, resolve_filter_plan
 from repro.serve.batcher import MicroBatch
 from repro.serve.request import FilterRequest, bucket_key, serve_key
 from repro.tuning import cache_generation
@@ -64,12 +65,15 @@ class BatchExecutor:
     # -------------------------------------------------- per-bucket plan memo
     def _plan(self, filt: str, method: str, mult_impl: str, n: int, h: int,
               w: int) -> dict:
-        """Explicit grid fields for a local-exec (n, h, w) dispatch of
-        `filt` -- resolved once per (bucket, traced batch size), pinned on
-        every later call (the §10 hot-path memoisation). The memo follows
-        the tuning cache's generation so an `invalidate_cache()` (an
-        autotune store under a running server) drops stale pinned winners
-        instead of serving them for the server's lifetime."""
+        """Explicit plan fields for a local-exec (n, h, w) dispatch of
+        `filt` -- the full `PlanConfig` (dataflow, resolved mult_impl, grid
+        organization, DESIGN.md §11) resolved once per (bucket, traced
+        batch size), pinned on every later call (the §10 hot-path
+        memoisation: all-explicit fields take `resolve_plan`'s fast path).
+        The memo follows the tuning cache's generation so an
+        `invalidate_cache()` (an autotune store under a running server)
+        drops stale pinned winners instead of serving them for the
+        server's lifetime."""
         gen = cache_generation()
         if gen != self._plans_gen:
             self._plans.clear()
@@ -77,30 +81,32 @@ class BatchExecutor:
         memo_key = (filt, method, mult_impl, n, h, w)
         plan = self._plans.get(memo_key)
         if plan is None:
-            cfg = resolve_filter_blocks(filt, n, h, w, method=method,
-                                        mult_impl=mult_impl)
-            plan = {"block_rows": cfg.block_rows,
-                    # None spells "unset" at the apply_filter boundary; a
-                    # full-width tile is pinned as block_cols=w
-                    # (see resolve_blocks)
-                    "block_cols": (w if cfg.block_cols is None
-                                   else cfg.block_cols),
+            cfg = resolve_filter_plan(filt, n, h, w, method=method,
+                                      mult_impl=mult_impl)
+            plan = {"separable": cfg.dataflow != "direct",
+                    "fused": cfg.dataflow == "fused",
+                    "mult_impl": cfg.mult_impl,
+                    "block_rows": cfg.block_rows,
+                    "block_cols": cfg.block_cols,
                     "batch_fold": cfg.batch_fold}
             self._plans[memo_key] = plan
         return plan
 
     def _exec_kw(self, exec_mode: str, filt: str, method: str,
                  mult_impl: str, n: int, h: int, w: int) -> dict:
+        """Complete per-dispatch kwargs, mult_impl included (the local plan
+        pins its resolved impl; scale-out modes forward the request's)."""
         if exec_mode == "local":
             return dict(self._plan(filt, method, mult_impl, n, h, w))
         if exec_mode == "sharded":
-            return {"exec": "sharded", "devices": self.devices}
+            return {"exec": "sharded", "devices": self.devices,
+                    "mult_impl": mult_impl}
         if exec_mode == "streamed":
             # tiles never exceed the bucket's image -- tiny buckets stream
             # as one tile instead of erroring on an oversized plan
             th, tw = min(self.tile[0], h), min(self.tile[1], w)
             return {"exec": "streamed", "tile": (th, tw),
-                    "tile_batch": self.tile_batch}
+                    "tile_batch": self.tile_batch, "mult_impl": mult_impl}
         raise ValueError(f"unknown exec mode {exec_mode!r}")
 
     # ------------------------------------------------------------- execution
@@ -122,7 +128,7 @@ class BatchExecutor:
                            traced_n, h, w)
         return apply_filter_batch(
             [r.img for r in requests], r0.filt, pad_to=traced_n,
-            method=r0.method, mult_impl=r0.mult_impl, nbits=r0.nbits,
+            method=r0.method, nbits=r0.nbits,
             interpret=self.interpret, **kw)
 
     def run(self, batch: MicroBatch) -> None:
@@ -148,7 +154,7 @@ class BatchExecutor:
         key = bucket_key(filt, method, mult_impl, exec_mode, nbits, h, w)
         kw = self._exec_kw(exec_mode, filt, method, mult_impl, traced_n, h, w)
         apply_filter_batch([np.zeros((h, w), np.int32)] * traced_n, filt,
-                           method=method, mult_impl=mult_impl, nbits=nbits,
+                           method=method, nbits=nbits,
                            interpret=self.interpret, **kw)
         skey = serve_key(key, traced_n)
         with self._lock:

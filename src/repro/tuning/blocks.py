@@ -45,6 +45,19 @@ def round_up(x: int, mult: int) -> int:
     return -(-int(x) // mult) * mult
 
 
+def min_block_rows(kh: int) -> int:
+    """Shallowest legal row band: the fused pass stacks kh row-shifted views
+    of a 2*(kh//2)-row halo'd band, and sublane tiling wants >= 8."""
+    return max(2 * (kh // 2), 8)
+
+
+def min_block_cols(kw: int) -> int:
+    """Narrowest legal column tile: must hold the kw//2-column halo on each
+    side (enforced fail-loud for explicit arguments in
+    `repro.filters.conv._dispatch`; plan sanitization clamps to it)."""
+    return max(2 * (kw // 2), 8)
+
+
 def choose_block_rows(h: int) -> int:
     """Largest divisor-candidate band height for an unfolded image of H rows
     (else the minimum: the pass pads H up to a multiple of it)."""
@@ -82,4 +95,4 @@ def default_blocks(kind: str, n: int, h: int, w: int, kh: int, kw: int, *,
 
 
 __all__ = ["MAX_BLOCK_ROWS", "BlockConfig", "choose_block_rows",
-           "default_blocks", "round_up"]
+           "default_blocks", "min_block_cols", "min_block_rows", "round_up"]

@@ -1,27 +1,43 @@
-"""The per-backend block-shape cache consulted by the conv datapath
-(DESIGN.md §8).
+"""The per-backend tuning cache consulted by the conv datapath: §8 block
+winners plus the §11 full execution plans (DESIGN.md).
 
 Format -- one committable JSON file per platform, `blocks_<backend>.json`
 next to this module (override the directory with `REPRO_TUNE_CACHE`):
 
     {
-      "meta": {"backend": "cpu", "generated": "<ISO-8601>", "version": 1},
-      "configs": {
+      "meta": {"backend": "cpu", "generated": "<ISO-8601>", "version": 2},
+      "blocks": {
         "<kind>/<mult_impl>/n4x128x128/k5x5": {
           "block_rows": 1040, "block_cols": null, "batch_fold": true,
           "us_per_call": 1234.5
         }, ...
+      },
+      "plans": {
+        "gaussian5/n4x128x128": {
+          "dataflow": "two_pass", "mult_impl": "kcm", "block_rows": 520,
+          "block_cols": 128, "batch_fold": true, "us_per_call": 1234.5,
+          "generated": "<ISO-8601>", "candidates": 36, "swept": 14,
+          "pruned": 22
+        }, ...
       }
     }
 
-Keys are `config_key(kind, n, h, w, kh, kw, mult_impl)` -- the dataflow
+Schema v2 (DESIGN.md §11) split the flat v1 `configs` mapping into two
+sections. `blocks` keeps the v1 per-pass grid winners under
+`config_key(kind, n, h, w, kh, kw, mult_impl)` -- the pass-level dataflow
 ('direct' | 'fused'; the two-pass separable stages are 'direct' entries
 distinguished by their 1-D tap extents), the resolved tap-product
-implementation
-('kcm' | 'recurse'), the batch/image shape and the filter extent. The
-multiplier *method* is deliberately not in the key: the KCM gather's cost is
-method-independent and the cache is keyed the way the ISSUE's autotuner
-sweeps it -- per (image shape, backend, mult_impl).
+implementation ('kcm' | 'recurse'), the batch/image shape and the filter
+extent. `plans` holds the filter-level execution plans under
+`repro.tuning.plans.plan_key(filter, n, h, w)`, each entry a full
+`PlanConfig` plus its measured time, its own BENCH_TIMESTAMP-honoring
+`generated` stamp and the roofline-pruning audit counters
+(candidates/swept/pruned) of the sweep that produced it. Legacy v1 files
+(`configs` at top level) migrate on load: the old mapping is read as the
+`blocks` section and the `plans` section starts empty; the next
+`store_cache` writes v2. The multiplier *method* is deliberately in
+neither key family: the KCM gather's cost is method-independent and the
+tuner sweeps refmlm -- plans and blocks are throughput-only artifacts.
 
 The (n, h, w) in the key is ALWAYS the shape the conv pass itself traces
 with. Under distributed execution (`repro.distribute`, DESIGN.md §9) that
@@ -52,7 +68,7 @@ import jax
 
 from repro.tuning.blocks import BlockConfig, default_blocks
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
 
 
 def backend_key() -> str:
@@ -82,19 +98,34 @@ def cache_timestamp() -> str:
 
 @lru_cache(maxsize=None)
 def _load(path: str) -> dict:
+    """-> {"blocks": {...}, "plans": {...}}, migrating legacy v1 files
+    (top-level `configs` = the old flat block mapping, no plans)."""
+    empty = {"blocks": {}, "plans": {}}
     p = pathlib.Path(path)
     if not p.exists():
-        return {}
+        return empty
     try:
         data = json.loads(p.read_text())
     except (OSError, json.JSONDecodeError):
-        return {}
-    return data.get("configs", {}) if isinstance(data, dict) else {}
+        return empty
+    if not isinstance(data, dict):
+        return empty
+    if "configs" in data:                       # v1: flat block mapping
+        return {"blocks": data.get("configs") or {}, "plans": {}}
+    return {"blocks": data.get("blocks") or {},
+            "plans": data.get("plans") or {}}
 
 
 def load_cache(backend: str | None = None) -> dict:
-    """key -> {block_rows, block_cols, batch_fold, us_per_call} mapping."""
-    return _load(str(cache_path(backend)))
+    """Block section: key -> {block_rows, block_cols, batch_fold,
+    us_per_call} (v1 files migrate transparently)."""
+    return _load(str(cache_path(backend)))["blocks"]
+
+
+def load_plans(backend: str | None = None) -> dict:
+    """Plan section: plan_key -> full PlanConfig entry (DESIGN.md §11);
+    empty for legacy v1 files."""
+    return _load(str(cache_path(backend)))["plans"]
 
 
 #: bumped by every invalidate -- downstream memo layers (the serve
@@ -115,14 +146,26 @@ def invalidate_cache() -> None:
     resolve_blocks_cached.cache_clear()
 
 
-def store_cache(configs: dict, backend: str | None = None) -> pathlib.Path:
-    """Write the committable per-backend cache file; returns its path."""
+def store_cache(configs: dict, plans: dict | None = None,
+                backend: str | None = None) -> pathlib.Path:
+    """Write the committable per-backend cache file; returns its path.
+
+    `configs` is the block section; `plans=None` preserves the file's
+    existing plan section (so a blocks-only store -- the pre-v2 call
+    signature -- never wipes tuned plans), `plans={...}` replaces it.
+    Keys in both sections are sorted and `generated` honors
+    BENCH_TIMESTAMP, so regeneration is byte-deterministic up to the
+    measured winners themselves.
+    """
     backend = backend or backend_key()
     path = cache_path(backend)
+    if plans is None:
+        plans = load_plans(backend)
     payload = {
         "meta": {"backend": backend, "generated": cache_timestamp(),
                  "version": CACHE_VERSION},
-        "configs": {k: configs[k] for k in sorted(configs)},
+        "blocks": {k: configs[k] for k in sorted(configs)},
+        "plans": {k: plans[k] for k in sorted(plans)},
     }
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
@@ -195,6 +238,6 @@ def resolve_blocks_cached(kind: str, n: int, h: int, w: int, kh: int,
     return resolve_blocks(kind, n, h, w, kh, kw, mult_impl)
 
 
-__all__ = ["backend_key", "cache_generation", "cache_path", "config_key",
-           "invalidate_cache", "load_cache", "resolve_blocks",
-           "resolve_blocks_cached", "store_cache"]
+__all__ = ["CACHE_VERSION", "backend_key", "cache_generation", "cache_path",
+           "config_key", "invalidate_cache", "load_cache", "load_plans",
+           "resolve_blocks", "resolve_blocks_cached", "store_cache"]

@@ -331,16 +331,16 @@ class TestWarmupAndPlans:
 
     def test_plan_resolved_once_per_bucket(self, monkeypatch):
         """Steady-state dispatch does no tuning-cache re-resolution: the
-        BlockConfig winner is resolved once per (bucket, traced n)."""
+        PlanConfig winner is resolved once per (bucket, traced n)."""
         from repro.serve import executor as executor_mod
         calls = []
-        real = executor_mod.resolve_filter_blocks
+        real = executor_mod.resolve_filter_plan
 
         def spy(*a, **kw):
             calls.append(a)
             return real(*a, **kw)
 
-        monkeypatch.setattr(executor_mod, "resolve_filter_blocks", spy)
+        monkeypatch.setattr(executor_mod, "resolve_filter_plan", spy)
         cfg = ServerConfig(max_batch=2, max_delay_ms=FAR)
         with ImageFilterServer(cfg) as srv:
             futs = [srv.submit(image(80 + i), "gaussian3") for i in range(6)]
@@ -391,6 +391,25 @@ class TestPipelineHooks:
                 imgs, name, block_rows=cfg.block_rows,
                 block_cols=w if cfg.block_cols is None else cfg.block_cols,
                 batch_fold=cfg.batch_fold)
+            np.testing.assert_array_equal(np.asarray(pinned),
+                                          np.asarray(apply_filter(imgs, name)))
+
+    def test_resolve_filter_plan_pins_bit_identically(self):
+        """Pinning the full resolved plan explicitly (the §11 serve hot
+        path) gives the same bytes as letting apply_filter resolve."""
+        from repro.filters import resolve_filter_plan
+        imgs = np.stack([image(40 + i) for i in range(4)])
+        for name in ("gaussian5", "laplacian"):      # separable + direct
+            n, h, w = imgs.shape
+            plan = resolve_filter_plan(name, n, h, w)
+            assert plan.mult_impl in ("kcm", "recurse")   # concretized
+            assert None not in (plan.block_rows, plan.block_cols,
+                                plan.batch_fold)
+            pinned = apply_filter(
+                imgs, name, separable=plan.dataflow != "direct",
+                fused=plan.dataflow == "fused", mult_impl=plan.mult_impl,
+                block_rows=plan.block_rows, block_cols=plan.block_cols,
+                batch_fold=plan.batch_fold)
             np.testing.assert_array_equal(np.asarray(pinned),
                                           np.asarray(apply_filter(imgs, name)))
 

@@ -1,21 +1,31 @@
-"""The block-shape autotuner (repro.tuning, DESIGN.md §8): heuristic
-defaults, cache determinism, and the explicit > cached > heuristic
-resolution order."""
+"""The autotuner (repro.tuning): §8 block heuristics and resolution
+order, the v2 cache schema (blocks + plans) with v1 migration, §11 plan
+resolution precedence, and sweep determinism/reproducibility."""
 import json
 
 import pytest
 
 from repro.tuning import (
     BlockConfig,
+    PlanConfig,
     choose_block_rows,
     config_key,
     default_blocks,
     invalidate_cache,
     load_cache,
+    load_plans,
+    plan_key,
     resolve_blocks,
+    resolve_plan,
     store_cache,
 )
-from repro.tuning.autotune import DEFAULT_SWEEP, candidate_blocks, tune
+from repro.tuning.autotune import (
+    DEFAULT_SWEEP,
+    candidate_blocks,
+    plan_candidates,
+    sweep_plan,
+    tune,
+)
 from repro.tuning.blocks import round_up
 from repro.tuning.cache import backend_key, cache_path
 
@@ -147,6 +157,180 @@ class TestResolve:
         store_cache({TestCache.KEY: TestCache.ENTRY})
         cfg = resolve_blocks("direct", 2, 48, 40, 3, 3, "recurse")
         assert cfg == default_blocks("direct", 2, 48, 40, 3, 3)
+
+
+PLAN_ENTRY = {"dataflow": "two_pass", "mult_impl": "kcm",
+              "block_rows": 136, "block_cols": 64, "batch_fold": True,
+              "us_per_call": 500.0, "generated": "2026-01-01T00:00:00Z",
+              "candidates": 54, "swept": 13, "pruned": 41}
+
+
+class TestCacheV2:
+    def test_plans_roundtrip(self, tmp_cache):
+        key = plan_key("gaussian5", 2, 64, 64)
+        store_cache({}, {key: PLAN_ENTRY})
+        assert load_plans()[key] == PLAN_ENTRY
+        data = json.loads(cache_path().read_text())
+        assert data["meta"]["version"] == 2
+        assert set(data) == {"meta", "blocks", "plans"}
+
+    def test_blocks_only_store_preserves_plans(self, tmp_cache):
+        """The pre-v2 call signature (blocks mapping alone) must never
+        wipe tuned plans -- a block-only re-sweep keeps the plan section."""
+        pkey = plan_key("gaussian5", 2, 64, 64)
+        store_cache({}, {pkey: PLAN_ENTRY})
+        store_cache({TestCache.KEY: TestCache.ENTRY})
+        assert load_plans()[pkey] == PLAN_ENTRY
+        assert load_cache()[TestCache.KEY] == TestCache.ENTRY
+
+    def test_v1_file_migrates_on_load(self, tmp_cache):
+        """Legacy files store the flat block mapping under 'configs'; they
+        load as the blocks section with an empty plan section, and the
+        next store rewrites them as v2."""
+        cache_path().write_text(json.dumps(
+            {"meta": {"backend": backend_key(), "version": 1},
+             "configs": {TestCache.KEY: TestCache.ENTRY}}))
+        invalidate_cache()
+        assert load_cache()[TestCache.KEY] == TestCache.ENTRY
+        assert load_plans() == {}
+        store_cache(load_cache())
+        data = json.loads(cache_path().read_text())
+        assert data["meta"]["version"] == 2
+        assert "configs" not in data
+        assert data["blocks"][TestCache.KEY] == TestCache.ENTRY
+
+
+class TestResolvePlan:
+    N, H, W = 2, 64, 64
+    KEY = plan_key("gaussian5", 2, 64, 64)
+
+    def _resolve(self, **kw):
+        return resolve_plan("gaussian5", self.N, self.H, self.W, 5, 5,
+                            separable_ok=True, **kw)
+
+    def test_miss_reproduces_pre_plan_defaults(self, tmp_cache):
+        """An untuned shape must change nothing: separable specs default
+        to the fused dataflow, everything else defers downstream."""
+        assert self._resolve() == PlanConfig("fused", "auto",
+                                             None, None, None)
+        assert resolve_plan("laplacian", 2, 64, 64, 3, 3,
+                            separable_ok=False) == PlanConfig(
+                                "direct", "auto", None, None, None)
+
+    def test_cached_plan_wins_on_default_args(self, tmp_cache):
+        store_cache({}, {self.KEY: PLAN_ENTRY})
+        assert self._resolve() == PlanConfig("two_pass", "kcm", 136, 64,
+                                             True)
+
+    def test_explicit_dataflow_rejects_disagreeing_entry(self, tmp_cache):
+        store_cache({}, {self.KEY: PLAN_ENTRY})
+        # fused=True excludes the cached two_pass winner wholesale
+        assert self._resolve(fused=True) == PlanConfig("fused", "auto",
+                                                       None, None, None)
+        # separable=False likewise
+        assert self._resolve(separable=False).dataflow == "direct"
+
+    def test_pinned_mult_impl_keeps_dataflow_drops_blocks(self, tmp_cache):
+        """Tuned grid fields were measured under the entry's impl; a
+        different pinned impl keeps the dataflow choice but re-defers the
+        blocks to the §8 pass-level resolution."""
+        store_cache({}, {self.KEY: PLAN_ENTRY})
+        assert self._resolve(mult_impl="recurse") == PlanConfig(
+            "two_pass", "recurse", None, None, None)
+
+    def test_disagreeing_block_field_drops_entry_blocks(self, tmp_cache):
+        store_cache({}, {self.KEY: PLAN_ENTRY})
+        got = self._resolve(block_rows=32)
+        assert got == PlanConfig("two_pass", "kcm", 32, None, None)
+
+    def test_agreeing_explicit_fields_keep_the_entry(self, tmp_cache):
+        store_cache({}, {self.KEY: PLAN_ENTRY})
+        assert self._resolve(batch_fold=True) == PlanConfig(
+            "two_pass", "kcm", 136, 64, True)
+
+    def test_fully_explicit_fast_path_skips_cache(self, tmp_cache):
+        store_cache({}, {self.KEY: PLAN_ENTRY})
+        got = self._resolve(fused=True, mult_impl="recurse", block_rows=16,
+                            block_cols=32, batch_fold=False)
+        assert got == PlanConfig("fused", "recurse", 16, 32, False)
+
+
+class TestPlanSweep:
+    def test_candidates_deterministic_and_concrete(self):
+        a = plan_candidates("gaussian5", 2, 64, 64)
+        b = plan_candidates("gaussian5", 2, 64, 64)
+        assert a == b and len(a) == len(set(a))
+        for p in a:
+            assert p.dataflow in ("direct", "two_pass", "fused")
+            assert p.mult_impl in ("recurse", "kcm")
+            assert None not in (p.block_rows, p.block_cols, p.batch_fold)
+
+    def test_non_separable_filter_gets_direct_only(self):
+        assert {p.dataflow for p in plan_candidates("laplacian", 2, 64, 64)
+                } == {"direct"}
+
+    @staticmethod
+    def _fake_timer(winner):
+        """Deterministic fake timings: the designated winner is fastest,
+        everything else ranks by a stable arbitrary function."""
+        def fn(p):
+            if p == winner:
+                return 10.0
+            return 100.0 + (hash(p) % 97)
+        return fn
+
+    def test_pruned_sweep_audits_and_keeps_winner(self, tmp_cache):
+        cands = plan_candidates("gaussian5", 2, 64, 64)
+        # the bound-cheapest candidate as winner: always swept first
+        winner = cands[0]
+        entry, records = sweep_plan(
+            "gaussian5", 2, 64, 64, prune=True,
+            measure_fn=self._fake_timer(winner), verbose=False)
+        assert entry["candidates"] == len(cands)
+        assert entry["swept"] + entry["pruned"] == len(cands)
+        assert entry["swept"] == len(records)
+        assert entry["pruned"] > 0          # the recurse tail must prune
+        assert entry["swept"] < len(cands)  # strictly fewer than exhaustive
+
+    def test_exhaustive_sweep_times_everything(self, tmp_cache):
+        cands = plan_candidates("gaussian5", 2, 64, 64)
+        entry, records = sweep_plan(
+            "gaussian5", 2, 64, 64, prune=False,
+            measure_fn=self._fake_timer(cands[0]), verbose=False)
+        assert entry["swept"] == len(cands) == len(records)
+        assert entry["pruned"] == 0
+
+
+class TestReproducibility:
+    def _stub_timers(self, monkeypatch):
+        """Deterministic timings as a pure function of the swept point --
+        identical across runs, so any byte diff is the tuner's fault."""
+        def measure_stub(kind, cfg, n, h, w, kh, kw, impl, iters=3):
+            return float(
+                100 + cfg.block_rows % 89 + (cfg.block_cols or 0) % 13
+                + cfg.batch_fold + len(kind))
+
+        def measure_plan_stub(name, plan, n, h, w, iters=3):
+            return float(
+                100 + plan.block_rows % 89 + plan.block_cols % 13
+                + bool(plan.batch_fold) + len(plan.dataflow)
+                + 900 * (plan.mult_impl == "recurse"))
+
+        monkeypatch.setattr("repro.tuning.autotune.measure", measure_stub)
+        monkeypatch.setattr("repro.tuning.autotune.measure_plan",
+                            measure_plan_stub)
+
+    def test_two_quick_runs_write_identical_bytes(self, tmp_cache,
+                                                  monkeypatch):
+        from repro.tuning.autotune import main
+        self._stub_timers(monkeypatch)
+        monkeypatch.setenv("BENCH_TIMESTAMP", "2026-01-01T00:00:00Z")
+        assert main(["--quick", "--no-merge"]) == 0
+        first = cache_path().read_bytes()
+        assert json.loads(first)["plans"]    # --quick writes plan entries
+        invalidate_cache()
+        assert main(["--quick", "--no-merge"]) == 0
+        assert cache_path().read_bytes() == first
 
 
 class TestTune:
