@@ -22,18 +22,41 @@ throughput must not fall below sequential, coalesced p99 must stay inside
 a generous SLO bound derived from the measured sequential latency (only a
 stall or a lost wakeup trips it), and a served output is spot-checked
 bit-identical against the direct `apply_filter` call.
+
+The fault-rate scenario (DESIGN.md §12) re-runs the coalesced load with
+~1% of requests deterministically poisoned through the injection harness
+(`repro.runtime.fault`): the `serve_fault_clean` / `serve_fault_injected`
+rows measure throughput and tail latency with the bisection-isolation
+machinery actually firing, and `serve_fault_overhead` is the clean-vs-
+injected throughput ratio -- the price of isolating a poisoned request
+(at most 2*log2(N) extra dispatches each). ``--smoke-fault`` is the
+`scripts/check.sh --smoke-fault` guard over the same machinery: isolate a
+poisoned request (neighbors bit-identical), shed an expired deadline
+without burning a dispatch, resume a half-journaled stream to the exact
+cold-run bytes, and end with a drained server reporting healthy.
 """
 from __future__ import annotations
 
+import contextlib
 import sys
+import tempfile
 import threading
 import time
+from pathlib import Path
 
 import numpy as np
 
 from benchmarks.common import emit, percentiles, write_bench_json
+from repro.distribute import stream_filter
 from repro.filters import apply_filter
-from repro.serve import ImageFilterServer, ServerConfig
+from repro.runtime.fault import (
+    SITE_EXECUTE,
+    SITE_TILE,
+    FaultInjector,
+    InjectedFault,
+    fault_scope,
+)
+from repro.serve import DeadlineExceeded, ImageFilterServer, ServerConfig
 
 #: (shape, filter) mix of the load: two buckets per shape family.
 DEFAULT_MIX = (((128, 128), "gaussian5"), ((128, 128), "sobel_x"),
@@ -51,12 +74,18 @@ def _requests(rng, n: int, mix) -> list[tuple[np.ndarray, str]]:
 
 
 def run_load(*, coalesce: bool, clients: int, per_client: int, mix,
-             max_batch: int = 8, max_delay_ms: float = 2.0) -> dict:
+             max_batch: int = 8, max_delay_ms: float = 2.0,
+             poison_seqs: frozenset = frozenset()) -> dict:
     """One load run; returns latencies, throughput and server stats.
 
     The sequential discipline also zeroes the flush deadline: a lone
     request then dispatches immediately, so the baseline measures the raw
-    request path, not an artificial `max_delay` sleep per request."""
+    request path, not an artificial `max_delay` sleep per request.
+
+    `poison_seqs` (§12 fault scenario) names submission sequence numbers
+    to deterministically poison through the injection harness: those
+    requests fail with `InjectedFault` (clients tolerate it; latencies
+    record successes only) while bisection re-serves every neighbor."""
     cfg = ServerConfig(max_batch=max_batch,
                        max_delay_ms=max_delay_ms if coalesce else 0.0,
                        max_pending=max(64, clients * per_client))
@@ -68,7 +97,10 @@ def run_load(*, coalesce: bool, clients: int, per_client: int, mix,
     def sequential_client(stream):
         for img, filt in stream:
             t0 = time.perf_counter()
-            srv.submit(img, filt).result(300)
+            try:
+                srv.submit(img, filt).result(300)
+            except InjectedFault:
+                continue                    # the poisoned request's fate
             dt = (time.perf_counter() - t0) * 1e3
             with lat_lock:
                 latencies_ms.append(dt)
@@ -78,12 +110,19 @@ def run_load(*, coalesce: bool, clients: int, per_client: int, mix,
         for img, filt in stream:
             pending.append((time.perf_counter(), srv.submit(img, filt)))
         for t0, fut in pending:
-            fut.result(300)
+            try:
+                fut.result(300)
+            except InjectedFault:
+                continue
             dt = (time.perf_counter() - t0) * 1e3
             with lat_lock:
                 latencies_ms.append(dt)
 
-    with ImageFilterServer(cfg) as srv:
+    scope = contextlib.nullcontext()
+    if poison_seqs:
+        scope = fault_scope(FaultInjector().poison(SITE_EXECUTE,
+                                                   *poison_seqs))
+    with scope, ImageFilterServer(cfg) as srv:
         shapes = sorted({shape for shape, _ in mix})
         filters = sorted({filt for _, filt in mix})
         batches = sorted({1 << k for k in range(max_batch.bit_length())})
@@ -97,11 +136,15 @@ def run_load(*, coalesce: bool, clients: int, per_client: int, mix,
             t.join()
         wall_s = time.perf_counter() - t0
         stats = srv.stats()
+    total = clients * per_client
     total_pix = sum(h * w for stream in streams for (img, _) in stream
                     for (h, w) in [img.shape])
-    assert stats["served"] == clients * per_client, "requests went missing"
+    expect_fail = sum(1 for s in poison_seqs if s <= total)
+    assert stats["served"] == total - expect_fail, "requests went missing"
+    assert stats["failed"] == expect_fail, "innocent requests failed"
+    served_pix = total_pix * stats["served"] / total
     return {"latencies_ms": latencies_ms, "wall_s": wall_s,
-            "mpix_s": total_pix / wall_s / 1e6, "stats": stats}
+            "mpix_s": served_pix / wall_s / 1e6, "stats": stats}
 
 
 def _emit_run(name: str, run: dict, **extra) -> None:
@@ -130,6 +173,35 @@ def bench(*, clients: int, per_client: int, mix, max_batch: int = 8,
     emit(f"{tag}coalesce_speedup",
          runs["coalesced"]["mpix_s"] / runs["seq"]["mpix_s"],
          "x_vs_sequential_mpix_s")
+    return runs
+
+
+def bench_fault(*, clients: int = 4, per_client: int = 25, mix=DEFAULT_MIX,
+                max_batch: int = 8, max_delay_ms: float = 2.0,
+                tag: str = "serve_fault_") -> dict:
+    """Coalesced throughput/tail-latency under a ~1% injected failure rate
+    vs the clean run (DESIGN.md §12): every 100th submission is poisoned,
+    so the bisection isolation pays its 2*log2(N)-dispatch price while
+    every innocent neighbor is still served bit-identically."""
+    total = clients * per_client
+    poison = frozenset(range(50, total + 1, 100))
+    runs = {}
+    runs["clean"] = run_load(coalesce=True, clients=clients,
+                             per_client=per_client, mix=mix,
+                             max_batch=max_batch, max_delay_ms=max_delay_ms)
+    _emit_run(f"{tag}clean", runs["clean"], requests=total)
+    runs["injected"] = run_load(coalesce=True, clients=clients,
+                                per_client=per_client, mix=mix,
+                                max_batch=max_batch,
+                                max_delay_ms=max_delay_ms,
+                                poison_seqs=poison)
+    st = runs["injected"]["stats"]
+    _emit_run(f"{tag}injected", runs["injected"], requests=total,
+              poisoned=len(poison), isolated=st["isolated"],
+              retries=st["retries"])
+    emit(f"{tag}overhead",
+         runs["clean"]["mpix_s"] / runs["injected"]["mpix_s"],
+         "x_clean_vs_injected_mpix_s")
     return runs
 
 
@@ -180,13 +252,103 @@ def smoke(threshold: float = 1.0) -> int:
     return rc
 
 
+def smoke_fault() -> int:
+    """Reduced-size §12 fault guards (scripts/check.sh --smoke-fault):
+    isolate a poisoned request, shed an expired deadline, resume a
+    half-journaled stream bit-identically, end healthy and drained."""
+    rc = 0
+    rng = np.random.default_rng(11)
+    far = 3600_000.0
+
+    # -- guard 1: a poisoned request is isolated, neighbors bit-identical
+    imgs = [rng.integers(0, 256, (32, 32)).astype(np.int32)
+            for _ in range(5)]
+    inj = FaultInjector().poison(SITE_EXECUTE, 3)
+    cfg = ServerConfig(max_batch=5, max_delay_ms=far)
+    with fault_scope(inj), ImageFilterServer(cfg) as srv:
+        futs = [srv.submit(im, "gaussian3") for im in imgs]
+        srv.close(drain=True)
+        stats = srv.stats()
+    ok = stats["isolated"] == 1 and stats["served"] == 4
+    for i, (im, fut) in enumerate(zip(imgs, futs)):
+        if i == 2:
+            ok &= fut.failed() and isinstance(fut.exception(), InjectedFault)
+        else:
+            ok &= (fut.result(60)
+                   == np.asarray(apply_filter(im, "gaussian3"))).all()
+    ok &= stats["healthy"]          # isolation is not degradation
+    print(f"# smoke-fault: poisoned request isolated "
+          f"(isolated={stats['isolated']}, retries={stats['retries']}, "
+          f"neighbors bit-identical: {bool(ok)})")
+    if not ok:
+        print("# FAIL: bisection isolation lost or corrupted a neighbor")
+        rc = 1
+
+    # -- guard 2: an expired deadline sheds without burning a dispatch
+    with ImageFilterServer(ServerConfig(max_batch=8,
+                                        max_delay_ms=far)) as srv:
+        fut = srv.submit(imgs[0], "gaussian3", deadline_ms=0.0)
+        try:
+            fut.result(60)
+            shed_ok = False
+        except DeadlineExceeded:
+            shed_ok = True
+        stats = srv.stats()
+    shed_ok &= stats["shed"] == 1 and stats["batches"] == 0
+    print(f"# smoke-fault: expired deadline shed pre-dispatch "
+          f"(shed={stats['shed']}, batches={stats['batches']})")
+    if not shed_ok:
+        print("# FAIL: expired request was dispatched or not shed")
+        rc = 1
+
+    # -- guard 3: killed-then-resumed stream == cold run, byte for byte
+    src = rng.integers(0, 256, (48, 48)).astype(np.int32)
+    cold = np.asarray(stream_filter(src, "gaussian3", tile=(16, 16),
+                                    tile_batch=2))
+    with tempfile.TemporaryDirectory() as td:
+        out = np.memmap(Path(td) / "o.u8", np.uint8, "w+", shape=src.shape)
+        kill = FaultInjector().at_index(SITE_TILE, 5)
+        try:
+            with fault_scope(kill):
+                stream_filter(src, "gaussian3", tile=(16, 16), tile_batch=2,
+                              out=out)
+            resume_ok = False           # the injected crash never happened
+        except InjectedFault:
+            res = stream_filter(src, "gaussian3", tile=(16, 16),
+                                tile_batch=2, out=out, resume=True)
+            resume_ok = np.array_equal(np.asarray(res), cold)
+    print(f"# smoke-fault: half-journaled stream resumed bit-identically "
+          f"({resume_ok})")
+    if not resume_ok:
+        print("# FAIL: resumed stream differs from the cold run")
+        rc = 1
+
+    # -- guard 4: after the chaos, a fresh drained server reports healthy
+    with ImageFilterServer(ServerConfig(max_batch=4,
+                                        max_delay_ms=far)) as srv:
+        futs = [srv.submit(im, "gaussian3") for im in imgs[:4]]
+        srv.close(drain=True)
+        stats = srv.stats()
+    end_ok = (stats["state"] == "healthy" and stats["pending"] == 0
+              and stats["served"] == 4 and all(not f.failed() for f in futs))
+    print(f"# smoke-fault: drained end state {stats['state']} "
+          f"(pending={stats['pending']}, served={stats['served']})")
+    if not end_ok:
+        print("# FAIL: server did not end drained and healthy")
+        rc = 1
+    return rc
+
+
 def main() -> None:
     bench(clients=4, per_client=16, mix=DEFAULT_MIX, max_batch=8,
           max_delay_ms=2.0)
+    bench_fault(clients=4, per_client=25, mix=DEFAULT_MIX)
 
 
 if __name__ == "__main__":
     if "--smoke" in sys.argv[1:]:
         sys.exit(smoke())
+    if "--smoke-fault" in sys.argv[1:]:
+        sys.exit(smoke_fault())
     main()
     write_bench_json("BENCH_serve.json", prefix="serve_")

@@ -5,6 +5,7 @@
 #   scripts/check.sh --lint         doc-link lint only (fast)
 #   scripts/check.sh --smoke-serve  serving SLO guard only (DESIGN.md §10)
 #   scripts/check.sh --smoke-tune   plan-tuning guard only (DESIGN.md §11)
+#   scripts/check.sh --smoke-fault  fault-tolerance guard only (DESIGN.md §12)
 #
 # The perf smoke runs benchmarks/kernel_bench.py --smoke on a reduced size
 # and fails if (a) the KCM constant-coefficient path is slower than the
@@ -31,6 +32,14 @@
 # while timing strictly fewer candidates (pruning may only save time,
 # never flip the winner). Opt-in -- the exhaustive pass times the ~90x
 # slower recursion candidates, so it takes a few minutes.
+#
+# The fault smoke (--smoke-fault, serve_bench.py --smoke-fault) is the
+# DESIGN.md §12 guard: a deterministically poisoned request must be
+# isolated by the bisection retry with every neighbor served
+# bit-identically, an expired per-request deadline must shed before any
+# dispatch, a stream killed mid-run must resume from its tile journal to
+# the exact cold-run bytes, and a drained server must end reporting
+# healthy.
 #
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
@@ -75,6 +84,11 @@ if [[ "${1:-}" == "--smoke-tune" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--smoke-fault" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke-fault
+  exit 0
+fi
+
 lint
 if [[ "${1:-}" == "--lint" ]]; then
   exit 0
@@ -92,3 +106,6 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 
 echo "== serving smoke (serve_bench --smoke) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke
+
+echo "== fault-tolerance smoke (serve_bench --smoke-fault) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke-fault

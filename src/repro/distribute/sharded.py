@@ -46,6 +46,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distribute.mesh import BATCH_AXIS, ROWS_AXIS, filter_mesh, shard_dims
 from repro.filters.bank import FilterSpec, get_filter
+from repro.runtime.fault import SITE_SHARD
+from repro.runtime.fault import probe as fault_probe
 
 HALO_MODES = ("exchange", "embedded")
 
@@ -132,6 +134,11 @@ def sharded_call(pass_fn: Callable, pass_key: tuple, imgs: Array, ph: int, *,
         # skips the embedded mode's host-side window copy)
         halo = "exchange"
     n2, h2, hl = shard_dims(n, h, nb, nr, ph)
+    # §12 chaos hook: one probe per participating shard before dispatch --
+    # a matching rule models that shard's host/device failing the whole
+    # collective call (which is how a lost mesh member actually presents)
+    for shard in range(nb * nr):
+        fault_probe(SITE_SHARD, key=f"{pass_key[0]}/{halo}", index=shard)
     x = jnp.asarray(imgs)
     if n2 != n or h2 != h:
         x = jnp.pad(x, ((0, n2 - n), (0, h2 - h), (0, 0)))

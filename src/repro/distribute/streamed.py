@@ -1,5 +1,6 @@
 """Out-of-core execution: stream a larger-than-memory image through the
-filter datapath in overlapping tiles (DESIGN.md §9).
+filter datapath in overlapping tiles (DESIGN.md §9), with crash-resume via
+a completed-tile journal (DESIGN.md §12).
 
 `plan_tiles` walks the output domain in a (tile_h, tile_w) grid and names,
 for every output tile, the clipped source window that feeds it -- the tile
@@ -24,15 +25,36 @@ each output tile is written incrementally into `out` (a caller-provided
 array or memmap for gigapixel outputs, else an allocated ndarray). The
 datapath traces with the *tile-local* batch shape, so the block-shape
 tuning cache is keyed per-tile, never on the global image (DESIGN.md §9).
+
+**Crash-resume (§12).** When `out` is a file-backed memmap (or `journal=`
+names a path), a text journal records completed tile ownership *after*
+the tile's output rows are flushed: one header line fingerprinting the
+plan (shape × filter × tile × datapath kwargs) then one work-list index
+per completed tile. `stream_filter(..., resume=True)` validates the
+fingerprint, skips journaled tiles, and recomputes the rest -- a tile
+that was written but not yet journaled when the process died is simply
+recomputed to the same bytes (tiles are pure functions of the source), so
+the exactly-once planner invariant extends to exactly-once *across
+process restarts*, and a killed-then-resumed run is byte-identical to an
+uninterrupted one (asserted in tests/test_fault_tolerance.py). A torn
+trailing journal line from a mid-write crash is ignored.
 """
 from __future__ import annotations
 
+import os
+from pathlib import Path
 from typing import Iterator, NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.filters.bank import FilterSpec, get_filter
+from repro.runtime.fault import SITE_TILE
+from repro.runtime.fault import probe as fault_probe
+
+#: first token of a valid journal header line (version-bumped on format
+#: changes so a stale journal can never silently mis-resume)
+JOURNAL_MAGIC = "repro-stream-journal v1"
 
 
 class Tile(NamedTuple):
@@ -88,10 +110,54 @@ def _normalize_src(src) -> tuple[np.ndarray, tuple[int, ...]]:
     return src, orig
 
 
+#: datapath kwargs that identify the bytes a plan produces; filled into
+#: the fingerprint so the direct `stream_filter` spelling and the
+#: `apply_filter(exec='streamed')` spelling of one plan agree
+_FP_DEFAULTS = {"method": "refmlm", "mult_impl": "auto", "nbits": 8}
+
+
+def journal_fingerprint(orig: tuple, name: str, th: int, tw: int,
+                        kw: dict) -> str:
+    """One line identifying a stream plan + datapath: a journal written by
+    a run with a different shape, tile grid, filter, or filter kwargs must
+    never be resumed against (the tile indices or bytes would differ).
+    None-valued kwargs mean "auto" everywhere in this API and are dropped,
+    and the byte-determining defaults are always filled in, so the two
+    call spellings of the same plan share one fingerprint."""
+    canon = dict(_FP_DEFAULTS)
+    canon.update((k, v) for k, v in kw.items() if v is not None)
+    items = ",".join(f"{k}={canon[k]!r}" for k in sorted(canon))
+    return (f"shape={tuple(int(d) for d in orig)} filt={name} "
+            f"tile=({th},{tw}) kw[{items}]")
+
+
+def load_journal(path, fingerprint: str) -> set[int]:
+    """Completed work indices from `path`; {} when the file is missing.
+    Raises on a fingerprint mismatch; ignores a torn trailing line."""
+    p = Path(path)
+    if not p.exists() or p.stat().st_size == 0:
+        return set()
+    lines = p.read_text().splitlines()
+    head = lines[0]
+    if not head.startswith(JOURNAL_MAGIC):
+        raise ValueError(f"{p} is not a {JOURNAL_MAGIC!r} journal")
+    if head[len(JOURNAL_MAGIC):].strip() != fingerprint:
+        raise ValueError(
+            f"journal {p} was written by a different stream plan:\n"
+            f"  journal: {head[len(JOURNAL_MAGIC):].strip()}\n"
+            f"  call:    {fingerprint}")
+    # a crash mid-append can tear the last line; anything non-numeric
+    # (including a torn prefix of a number followed by EOF) is simply an
+    # uncompleted tile and gets recomputed
+    return {int(ln) for ln in lines[1:] if ln.strip().isdigit()}
+
+
 def stream_filter(src, filt: FilterSpec | str, *,
                   tile: tuple[int, int] = (256, 256),
                   tile_batch: int = 8,
                   out: np.ndarray | None = None,
+                  journal: str | os.PathLike | None = None,
+                  resume: bool = False,
                   **kw) -> np.ndarray:
     """Run one bank filter over an out-of-core source, tile by tile.
 
@@ -106,6 +172,14 @@ def stream_filter(src, filt: FilterSpec | str, *,
     `src` (including two memmaps of one file): overlapping tiles read
     neighbor halos from the source, so in-place streaming would read back
     already-written output.
+
+    `journal` / `resume` are the §12 crash-resume surface: a journal is
+    kept at `journal` (defaulting to `<out.filename>.journal` when `out`
+    is a file-backed memmap; no journal otherwise), and `resume=True`
+    skips tiles the journal records as complete -- byte-identical to a
+    cold run. `resume=True` requires the previous run's `out` array and a
+    resolvable journal path; a fresh run (`resume=False`) truncates any
+    stale journal at the same path.
     """
     from repro.filters.pipeline import apply_filter
     spec = get_filter(filt) if isinstance(filt, str) else filt
@@ -116,6 +190,9 @@ def stream_filter(src, filt: FilterSpec | str, *,
     ph, pw = kh // 2, kwid // 2
     th, tw = (min(int(tile[0]), h), min(int(tile[1]), w))
     TH, TW = th + 2 * ph, tw + 2 * pw
+    if resume and out is None:
+        raise ValueError("resume=True needs the previous run's out= array "
+                         "(a fresh one would leave skipped tiles unwritten)")
     if out is None:
         out = np.empty(orig, np.uint8)
     elif tuple(out.shape) != tuple(orig):
@@ -128,19 +205,65 @@ def stream_filter(src, filt: FilterSpec | str, *,
         raise ValueError("out must not alias the source array")
     oview = out.reshape(view.shape) if out.ndim != 3 else out
 
-    work = [(i, t) for i in range(n) for t in plan_tiles(h, w, th, tw, ph, pw)]
-    for group in _batches(work, max(int(tile_batch), 1)):
-        batch = np.zeros((len(group), TH, TW), np.int32)
-        for b, (i, t) in enumerate(group):
-            batch[b, t.pad_top:t.pad_top + (t.sr1 - t.sr0),
-                  t.pad_left:t.pad_left + (t.sc1 - t.sc0)] = \
-                view[i, t.sr0:t.sr1, t.sc0:t.sc1]
-        res = np.asarray(apply_filter(jnp.asarray(batch), spec, **kw))
-        for b, (i, t) in enumerate(group):
-            rows, cols = t.out_shape
-            oview[i, t.r0:t.r1, t.c0:t.c1] = \
-                res[b, ph:ph + rows, pw:pw + cols]
+    jpath = journal
+    if jpath is None:
+        fname = getattr(out, "filename", None)   # file-backed memmap only
+        if fname is not None:
+            jpath = f"{fname}.journal"
+        elif resume:
+            raise ValueError("resume=True needs journal= (or an out= memmap "
+                             "with a filename) to know what completed")
+    fp = journal_fingerprint(orig, spec.name, th, tw, kw)
+    done: set[int] = set()
+    jfile = None
+    if jpath is not None:
+        if resume:
+            done = load_journal(jpath, fp)
+            jfile = open(jpath, "a")
+            if not Path(jpath).exists() or Path(jpath).stat().st_size == 0:
+                jfile.write(f"{JOURNAL_MAGIC} {fp}\n")
+        else:
+            jfile = open(jpath, "w")             # truncate any stale journal
+            jfile.write(f"{JOURNAL_MAGIC} {fp}\n")
+        jfile.flush()
+
+    work = [(idx, i, t)
+            for idx, (i, t) in enumerate(
+                (i, t) for i in range(n)
+                for t in plan_tiles(h, w, th, tw, ph, pw))
+            if idx not in done]
+    try:
+        for group in _batches(work, max(int(tile_batch), 1)):
+            for idx, i, t in group:
+                fault_probe(SITE_TILE, key=f"img{i}:r{t.r0}c{t.c0}",
+                            index=idx)
+            batch = np.zeros((len(group), TH, TW), np.int32)
+            for b, (idx, i, t) in enumerate(group):
+                batch[b, t.pad_top:t.pad_top + (t.sr1 - t.sr0),
+                      t.pad_left:t.pad_left + (t.sc1 - t.sc0)] = \
+                    view[i, t.sr0:t.sr1, t.sc0:t.sc1]
+            res = np.asarray(apply_filter(jnp.asarray(batch), spec, **kw))
+            for b, (idx, i, t) in enumerate(group):
+                rows, cols = t.out_shape
+                oview[i, t.r0:t.r1, t.c0:t.c1] = \
+                    res[b, ph:ph + rows, pw:pw + cols]
+            if jfile is not None:
+                # durability order: output bytes first, then the journal
+                # lines that claim them -- a crash between the two only
+                # re-does work, never skips it
+                if isinstance(out, np.memmap):
+                    out.flush()
+                jfile.write("".join(f"{idx}\n" for idx, _, _ in group))
+                jfile.flush()
+                try:
+                    os.fsync(jfile.fileno())
+                except OSError:
+                    pass
+    finally:
+        if jfile is not None:
+            jfile.close()
     return out
 
 
-__all__ = ["Tile", "plan_tiles", "stream_filter"]
+__all__ = ["JOURNAL_MAGIC", "Tile", "journal_fingerprint", "load_journal",
+           "plan_tiles", "stream_filter"]

@@ -118,6 +118,8 @@ def apply_filter(
     tile: tuple[int, int] | None = None,
     tile_batch: int = 8,
     out=None,
+    journal=None,
+    resume: bool = False,
 ):
     """Run one bank filter over an image batch through the selected multiplier.
 
@@ -145,8 +147,11 @@ def apply_filter(
     picks 'exchange' ppermute neighbor exchange or 'embedded' overlapping
     host windows); 'streamed' walks the source out-of-core in overlapping
     `tile`-shaped batches of `tile_batch` and returns a NumPy array
-    (writing into `out` -- an ndarray or memmap -- when given). All three
-    modes are bit-identical (asserted in tests/test_distribute.py).
+    (writing into `out` -- an ndarray or memmap -- when given; `journal` /
+    `resume` are the §12 crash-resume surface: completed tiles journal
+    beside an `out` memmap and `resume=True` skips them bit-identically).
+    All three modes are bit-identical (asserted in
+    tests/test_distribute.py).
     """
     if exec not in EXEC_MODES:
         raise ValueError(f"exec must be one of {EXEC_MODES}, got {exec!r}")
@@ -156,8 +161,10 @@ def apply_filter(
                      interpret=interpret)
     if exec == "sharded":
         from repro.distribute import sharded_apply_filter
-        if tile is not None or out is not None or tile_batch != 8:
-            raise ValueError("tile/tile_batch/out are streamed-mode arguments")
+        if (tile is not None or out is not None or tile_batch != 8
+                or journal is not None or resume):
+            raise ValueError("tile/tile_batch/out/journal/resume are "
+                             "streamed-mode arguments")
         return sharded_apply_filter(imgs, filt, devices=devices,
                                     mesh_shape=mesh_shape, halo=halo,
                                     **filter_kw)
@@ -168,11 +175,13 @@ def apply_filter(
                              "arguments")
         return stream_filter(np.asarray(imgs), filt,
                              tile=tile if tile is not None else (256, 256),
-                             tile_batch=tile_batch, out=out, **filter_kw)
-    if ((devices, mesh_shape, tile, out) != (None, None, None, None)
-            or halo != "exchange" or tile_batch != 8):
-        raise ValueError("devices/mesh_shape/halo/tile/tile_batch/out "
-                         "require exec='sharded' or exec='streamed'")
+                             tile_batch=tile_batch, out=out, journal=journal,
+                             resume=resume, **filter_kw)
+    if ((devices, mesh_shape, tile, out, journal) != (None,) * 5
+            or halo != "exchange" or tile_batch != 8 or resume):
+        raise ValueError("devices/mesh_shape/halo/tile/tile_batch/out/"
+                         "journal/resume require exec='sharded' or "
+                         "exec='streamed'")
     spec = get_filter(filt) if isinstance(filt, str) else filt
     if separable and not spec.separable:
         raise ValueError(f"filter {spec.name!r} has no separable decomposition")

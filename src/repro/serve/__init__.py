@@ -30,11 +30,13 @@ from __future__ import annotations
 from repro.serve.admission import (
     AdmissionGate,
     ServerClosed,
+    ServerDegraded,
     ServerOverloaded,
 )
 from repro.serve.batcher import FLUSH_REASONS, MicroBatch, ShapeBucketedBatcher
-from repro.serve.executor import BatchExecutor, next_pow2
+from repro.serve.executor import SCALE_OUT_MODES, BatchExecutor, next_pow2
 from repro.serve.request import (
+    DeadlineExceeded,
     FilterFuture,
     FilterRequest,
     bucket_key,
@@ -44,14 +46,17 @@ from repro.serve.server import ImageFilterServer, ServerConfig
 
 __all__ = [
     "FLUSH_REASONS",
+    "SCALE_OUT_MODES",
     "AdmissionGate",
     "BatchExecutor",
+    "DeadlineExceeded",
     "FilterFuture",
     "FilterRequest",
     "ImageFilterServer",
     "MicroBatch",
     "ServerClosed",
     "ServerConfig",
+    "ServerDegraded",
     "ServerOverloaded",
     "ShapeBucketedBatcher",
     "bucket_key",

@@ -22,6 +22,13 @@ class ServerClosed(RuntimeError):
     """Submission after `close()` -- the worker is no longer flushing."""
 
 
+class ServerDegraded(RuntimeError):
+    """Fast-fail admission: the server is in the degraded state (a worker
+    fault or an exec-mode fallback, DESIGN.md §12) and was configured with
+    `fail_fast_degraded=True`, so new work is refused immediately instead
+    of queueing behind a possibly-slow degraded path."""
+
+
 class AdmissionGate:
     """Counting gate over in-flight requests with a bounded blocking wait."""
 
@@ -69,4 +76,5 @@ class AdmissionGate:
             self._cond.notify_all()
 
 
-__all__ = ["AdmissionGate", "ServerClosed", "ServerOverloaded"]
+__all__ = ["AdmissionGate", "ServerClosed", "ServerDegraded",
+           "ServerOverloaded"]

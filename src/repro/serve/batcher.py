@@ -14,9 +14,18 @@ fields one `apply_filter` call can serve -- and a bucket flushes as one
                     to `max_batch` (latency floor under light traffic);
   * **drain**    -- shutdown or an explicit flush: pop everything.
 
+**Deadline shedding** (DESIGN.md §12): before triggers are evaluated,
+requests whose own `deadline` has passed are swept out of their queues
+into the shed list (`take_shed()`), so an expired request never burns a
+dispatch and never pads a coalesced batch -- the server fails its future
+with `DeadlineExceeded` and releases its admission slot. `next_deadline()`
+accounts for request deadlines too, so the worker wakes to shed promptly.
+
 Exactly-once by construction: a request lives in exactly one bucket queue
-until it is popped into exactly one `MicroBatch` (asserted under
-concurrent mixed-shape load in tests/test_serve.py).
+until it is popped into exactly one `MicroBatch` *or* swept into the shed
+list exactly once (asserted under concurrent mixed-shape load in
+tests/test_serve.py and under chaos schedules in
+tests/test_fault_tolerance.py).
 """
 from __future__ import annotations
 
@@ -51,10 +60,30 @@ class ShapeBucketedBatcher:
         self.clock = clock
         # insertion-ordered so equal deadlines flush in arrival order
         self._buckets: OrderedDict[str, deque[FilterRequest]] = OrderedDict()
+        self._shed: list[FilterRequest] = []
 
     @property
     def pending(self) -> int:
         return sum(len(q) for q in self._buckets.values())
+
+    def _sweep_expired(self, now: float) -> None:
+        """Move every expired request from its queue to the shed list."""
+        for key in list(self._buckets):
+            q = self._buckets[key]
+            if not any(r.expired(now) for r in q):
+                continue
+            live = deque(r for r in q if not r.expired(now))
+            self._shed.extend(r for r in q if r.expired(now))
+            if live:
+                self._buckets[key] = live
+            else:
+                del self._buckets[key]
+
+    def take_shed(self) -> list[FilterRequest]:
+        """Expired requests swept since the last call (FIFO); the caller
+        owns failing their futures and releasing their admission slots."""
+        shed, self._shed = self._shed, []
+        return shed
 
     def add(self, req: FilterRequest) -> str:
         """Queue one admitted request; returns its bucket key."""
@@ -70,8 +99,10 @@ class ShapeBucketedBatcher:
         return MicroBatch(key, batch, reason)
 
     def ready(self, now: float | None = None) -> list[MicroBatch]:
-        """All batches whose size or deadline trigger has fired at `now`."""
+        """All batches whose size or deadline trigger has fired at `now`
+        (expired requests are swept to the shed list first, never batched)."""
         now = self.clock() if now is None else now
+        self._sweep_expired(now)
         out = []
         for key in list(self._buckets):
             while key in self._buckets:
@@ -85,13 +116,20 @@ class ShapeBucketedBatcher:
         return out
 
     def next_deadline(self) -> float | None:
-        """Earliest future instant a deadline trigger can fire (the server's
-        sleep bound), or None when nothing is pending."""
-        oldest = [q[0].submitted for q in self._buckets.values()]
-        return min(oldest) + self.max_delay_s if oldest else None
+        """Earliest future instant a deadline trigger *or* a request-shed
+        deadline can fire (the server's sleep bound), or None when nothing
+        is pending."""
+        cands = []
+        for q in self._buckets.values():
+            cands.append(q[0].submitted + self.max_delay_s)
+            cands.extend(r.deadline for r in q if r.deadline is not None)
+        return min(cands) if cands else None
 
     def drain(self) -> list[MicroBatch]:
-        """Flush every bucket regardless of triggers (shutdown path)."""
+        """Flush every bucket regardless of triggers (shutdown path).
+        Expired requests still shed rather than flush: their deadline
+        passed, so serving them on shutdown would violate it anyway."""
+        self._sweep_expired(self.clock())
         out = []
         for key in list(self._buckets):
             while key in self._buckets:

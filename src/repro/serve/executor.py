@@ -1,5 +1,6 @@
 """Micro-batch executor: flushed buckets -> the filter datapath
-(DESIGN.md §10).
+(DESIGN.md §10), with the failure-isolation and degradation machinery of
+DESIGN.md §12.
 
 One `MicroBatch` becomes one `apply_filter_batch` call: the bucket's
 requests stack into an (N, H, W) batch that rides the §8 batch fold, runs
@@ -26,6 +27,32 @@ Two steady-state amortisations:
     warm-start compile cache's bookkeeping: `repro.serve.warmup`
     pre-populates it (and jax's underlying jit cache) so first-request
     latency is amortised away.
+
+Failure handling (DESIGN.md §12), innermost to outermost:
+
+  * **bisect-and-retry isolation** -- when a dispatch raises, the batch is
+    split in half and each half re-dispatched; singletons that still raise
+    get the exception on their own future. Coalescing is batch-invariant
+    (bit-identity across occupancies, §10), so re-serving an innocent
+    neighbor in a smaller batch returns the same bytes -- isolation costs
+    at most 2·log2(N) extra dispatches per poisoned request, never
+    correctness. Counted in `retries` (re-dispatches) / `isolated`
+    (requests that kept the exception).
+  * **per-bucket degraded fallback** -- a sharded/streamed bucket whose
+    dispatch fails `degrade_after` consecutive times falls back to
+    `exec='local'` (bit-identical by the §9 contract) for the rest of the
+    server's life; fallback dispatches are counted per bucket in
+    `degraded`. Successful scale-out dispatches reset the consecutive
+    counter.
+  * **leak-proof fulfilment** -- `run()` never raises and fulfils every
+    future exactly once even when the datapath (or fulfilment itself)
+    raises mid-bucket: unresolved futures inherit the error, so no future
+    can hang and no admission slot can leak.
+
+The deterministic chaos harness (`repro.runtime.fault`) probes
+`SITE_EXECUTE` on every dispatch with the serve key, the exec mode
+actually used, and the batch's request sequence numbers -- the hooks the
+§12 tests and `scripts/check.sh --smoke-fault` drive.
 """
 from __future__ import annotations
 
@@ -34,9 +61,14 @@ import threading
 import numpy as np
 
 from repro.filters.pipeline import apply_filter_batch, resolve_filter_plan
+from repro.runtime.fault import SITE_EXECUTE
+from repro.runtime.fault import probe as fault_probe
 from repro.serve.batcher import MicroBatch
 from repro.serve.request import FilterRequest, bucket_key, serve_key
 from repro.tuning import cache_generation
+
+#: exec modes eligible for the per-bucket local fallback (§12)
+SCALE_OUT_MODES = ("sharded", "streamed")
 
 
 def next_pow2(n: int) -> int:
@@ -49,18 +81,25 @@ class BatchExecutor:
     def __init__(self, *, interpret: bool | None = None,
                  pad_pow2: bool = True, devices: int | None = None,
                  tile: tuple[int, int] = (256, 256),
-                 tile_batch: int = 8) -> None:
+                 tile_batch: int = 8, degrade_after: int = 2) -> None:
         self.interpret = interpret
         self.pad_pow2 = pad_pow2
         self.devices = devices
         self.tile = tuple(tile)
         self.tile_batch = int(tile_batch)
+        self.degrade_after = max(int(degrade_after), 1)
         self._lock = threading.Lock()
         self._plans: dict[tuple, dict] = {}
         self._plans_gen = cache_generation()
         self.warmed: set[str] = set()
         self.hits = 0
         self.misses = 0
+        # ------------------------------ §12 fault-tolerance bookkeeping
+        self.retries = 0                  # bisection re-dispatches
+        self.isolated = 0                 # requests that kept an exception
+        self.failures: dict[str, int] = {}   # bucket -> consecutive failures
+        self.degraded: dict[str, int] = {}   # bucket -> fallback dispatches
+        self._fallback: set[str] = set()     # buckets pinned to local exec
 
     # -------------------------------------------------- per-bucket plan memo
     def _plan(self, filt: str, method: str, mult_impl: str, n: int, h: int,
@@ -110,9 +149,10 @@ class BatchExecutor:
         raise ValueError(f"unknown exec mode {exec_mode!r}")
 
     # ------------------------------------------------------------- execution
-    def execute(self, key: str, requests: tuple[FilterRequest, ...]
-                ) -> list[np.ndarray]:
-        """Run one coalesced bucket slice; returns one output per request."""
+    def execute(self, key: str, requests: tuple[FilterRequest, ...], *,
+                exec_override: str | None = None) -> list[np.ndarray]:
+        """One dispatch of a coalesced bucket slice, no retry; returns one
+        output per request. `exec_override` is the §12 fallback hook."""
         r0 = requests[0]
         h, w = r0.img.shape
         n = len(requests)
@@ -124,24 +164,96 @@ class BatchExecutor:
             else:
                 self.misses += 1
                 self.warmed.add(skey)
-        kw = self._exec_kw(r0.exec, r0.filt, r0.method, r0.mult_impl,
+        mode = r0.exec if exec_override is None else exec_override
+        fault_probe(SITE_EXECUTE, key=f"{skey}|exec={mode}",
+                    seqs=tuple(r.seq for r in requests))
+        kw = self._exec_kw(mode, r0.filt, r0.method, r0.mult_impl,
                            traced_n, h, w)
         return apply_filter_batch(
             [r.img for r in requests], r0.filt, pad_to=traced_n,
             method=r0.method, nbits=r0.nbits,
             interpret=self.interpret, **kw)
 
+    def _dispatch(self, key: str, requests: tuple[FilterRequest, ...]
+                  ) -> list[np.ndarray]:
+        """`execute` under the per-bucket degraded-exec ladder (§12): a
+        scale-out bucket that failed `degrade_after` consecutive dispatches
+        is pinned to the bit-identical local path."""
+        scale_out = requests[0].exec in SCALE_OUT_MODES
+        if scale_out and key in self._fallback:
+            outs = self.execute(key, requests, exec_override="local")
+            with self._lock:
+                self.degraded[key] = self.degraded.get(key, 0) + 1
+            return outs
+        try:
+            outs = self.execute(key, requests)
+        except BaseException:                              # noqa: BLE001
+            if scale_out:
+                with self._lock:
+                    nfail = self.failures.get(key, 0) + 1
+                    self.failures[key] = nfail
+                    if nfail >= self.degrade_after:
+                        self._fallback.add(key)
+                if key in self._fallback:
+                    outs = self.execute(key, requests, exec_override="local")
+                    with self._lock:
+                        self.degraded[key] = self.degraded.get(key, 0) + 1
+                    return outs
+            raise
+        if scale_out:
+            with self._lock:
+                self.failures[key] = 0
+        return outs
+
+    def _fulfil(self, key: str, requests: tuple[FilterRequest, ...], *,
+                retry: bool = False) -> None:
+        """Dispatch + fulfil with bisection isolation: a failing batch
+        splits in half and each half re-dispatches, so only requests that
+        fail *alone* keep the exception (§12). Byte-safe: outputs are
+        batch-invariant (§10), so a re-served neighbor gets the same bits."""
+        if retry:
+            with self._lock:
+                self.retries += 1
+        try:
+            outs = self._dispatch(key, requests)
+        except BaseException as err:                       # noqa: BLE001
+            if len(requests) == 1:
+                with self._lock:
+                    self.isolated += 1
+                if not requests[0].future.done():
+                    requests[0].future.set_exception(err)
+                return
+            mid = len(requests) // 2
+            self._fulfil(key, requests[:mid], retry=True)
+            self._fulfil(key, requests[mid:], retry=True)
+            return
+        for req, out in zip(requests, outs):
+            if not req.future.done():
+                req.future.set_result(out)
+
     def run(self, batch: MicroBatch) -> None:
         """Execute and fulfil -- every future resolves exactly once, to its
-        own request's output or to the batch's failure."""
+        own request's output or to its own (isolated) failure. Never
+        raises: any error escaping the isolation machinery itself lands on
+        the still-unresolved futures, so none can hang (§12)."""
         try:
-            outs = self.execute(batch.key, batch.requests)
+            self._fulfil(batch.key, batch.requests)
         except BaseException as err:                       # noqa: BLE001
             for req in batch.requests:
-                req.future.set_exception(err)
-            return
-        for req, out in zip(batch.requests, outs):
-            req.future.set_result(out)
+                if not req.future.done():
+                    req.future.set_exception(err)
+
+    @property
+    def degraded_mode(self) -> bool:
+        """True once any bucket has been pinned to the local fallback."""
+        return bool(self._fallback)
+
+    def fault_stats(self) -> dict:
+        """Snapshot of the §12 counters (the server's stats() source)."""
+        with self._lock:
+            return {"retries": self.retries, "isolated": self.isolated,
+                    "degraded": dict(self.degraded),
+                    "dispatch_failures": dict(self.failures)}
 
     # ---------------------------------------------------------------- warmup
     def warm(self, shape: tuple[int, int], filt: str, *,
@@ -162,4 +274,4 @@ class BatchExecutor:
         return skey
 
 
-__all__ = ["BatchExecutor", "next_pow2"]
+__all__ = ["BatchExecutor", "SCALE_OUT_MODES", "next_pow2"]

@@ -12,6 +12,10 @@ fields that must match for two requests to share one `apply_filter` call
 warm-start compile-cache key, the serving analogue of
 `repro.tuning.config_key` (shape bucket × filter × mult_impl × exec, plus
 the padded N the executable actually traces with).
+
+A request may carry an absolute `deadline` (admission clock domain):
+requests still queued past it are *shed* at flush time with
+`DeadlineExceeded` instead of burning a dispatch (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -19,6 +23,11 @@ import dataclasses
 import threading
 
 import numpy as np
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline expired while it was still queued; it was
+    shed at flush time without being dispatched (DESIGN.md §12)."""
 
 
 def bucket_key(filt: str, method: str, mult_impl: str, exec_mode: str,
@@ -38,6 +47,8 @@ class FilterFuture:
     Exactly one of `set_result` / `set_exception` is ever called (the
     batcher's exactly-once guarantee, asserted in tests/test_serve.py);
     `result()` blocks until then and re-raises any server-side failure.
+    `done()` / `failed()` / `exception()` are the public, non-blocking
+    outcome API the server's per-request accounting reads (DESIGN.md §12).
     """
 
     __slots__ = ("_event", "_value", "_error")
@@ -48,7 +59,16 @@ class FilterFuture:
         self._error: BaseException | None = None
 
     def done(self) -> bool:
+        """True once the future is fulfilled (result or exception)."""
         return self._event.is_set()
+
+    def failed(self) -> bool:
+        """True iff fulfilled with an exception. Never blocks."""
+        return self._event.is_set() and self._error is not None
+
+    def exception(self) -> BaseException | None:
+        """The fulfilment exception, or None (unfulfilled or succeeded)."""
+        return self._error if self._event.is_set() else None
 
     def set_result(self, value: np.ndarray) -> None:
         assert not self._event.is_set(), "future fulfilled twice"
@@ -82,6 +102,7 @@ class FilterRequest:
     future: FilterFuture
     submitted: float             # admission clock() -- the flush deadline base
     seq: int                     # admission order (FIFO within a bucket)
+    deadline: float | None = None   # absolute shed deadline (clock domain)
 
     @property
     def key(self) -> str:
@@ -89,5 +110,10 @@ class FilterRequest:
         return bucket_key(self.filt, self.method, self.mult_impl, self.exec,
                           self.nbits, h, w)
 
+    def expired(self, now: float) -> bool:
+        """True when the request carries a deadline that has passed."""
+        return self.deadline is not None and now >= self.deadline
 
-__all__ = ["FilterFuture", "FilterRequest", "bucket_key", "serve_key"]
+
+__all__ = ["DeadlineExceeded", "FilterFuture", "FilterRequest", "bucket_key",
+           "serve_key"]

@@ -1,4 +1,5 @@
-"""`ImageFilterServer` -- the online serving loop (DESIGN.md §10).
+"""`ImageFilterServer` -- the online serving loop (DESIGN.md §10) with the
+§12 fault-tolerance surface.
 
 One worker thread owns all device dispatch; client threads only validate,
 stack and wait. `submit()` admits a request through the backpressure gate
@@ -11,13 +12,26 @@ plus executing work.
 
     with ImageFilterServer(ServerConfig(max_batch=8)) as srv:
         srv.warmup(shapes=[(128, 128)], filters=["gaussian5"])
-        fut = srv.submit(img, "gaussian5", method="refmlm")
+        fut = srv.submit(img, "gaussian5", method="refmlm",
+                         deadline_ms=50.0)
         out = fut.result()          # bit-identical to apply_filter(img, ...)
 
-`stats()` reports the served/batch counters, the batch-occupancy
-histogram, flush-trigger counts and the warm compile-cache hit ledger --
-the observability surface the serve benchmark and the `--smoke-serve`
-guard read.
+Failure handling (DESIGN.md §12): a request whose `deadline_ms` expires
+while still queued is *shed* at flush time (`DeadlineExceeded`, slot
+released, counted in `stats()['shed']`) instead of burning a dispatch;
+executor faults bisect so only genuinely poisoned requests fail; and a
+catch-all around every batch keeps the worker alive -- it fails that
+batch's unresolved futures, releases the slots, records the error, and
+flips the server to the explicit degraded state (`stats()['healthy']` /
+`['state']`) instead of silently hanging every pending future. With
+`fail_fast_degraded=True`, submissions to a degraded server raise
+`ServerDegraded` immediately rather than queueing.
+
+`stats()` reports the per-request served/failed/shed counters, the batch
+occupancy histogram, flush-trigger counts, the warm compile-cache hit
+ledger, and the §12 fault counters (isolated / retries / degraded buckets
+/ worker errors) -- the observability surface the serve benchmark and the
+`--smoke-serve` / `--smoke-fault` guards read.
 """
 from __future__ import annotations
 
@@ -31,10 +45,14 @@ import numpy as np
 from repro.filters.bank import get_filter
 from repro.filters.conv import MULT_IMPLS
 from repro.filters.pipeline import EXEC_MODES
-from repro.serve.admission import AdmissionGate, ServerClosed
+from repro.serve.admission import (
+    AdmissionGate,
+    ServerClosed,
+    ServerDegraded,
+)
 from repro.serve.batcher import MicroBatch, ShapeBucketedBatcher
 from repro.serve.executor import BatchExecutor
-from repro.serve.request import FilterFuture, FilterRequest
+from repro.serve.request import DeadlineExceeded, FilterFuture, FilterRequest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +69,11 @@ class ServerConfig:
     devices: int | None = None      # sharded-exec mesh size (None = all)
     tile: tuple[int, int] = (256, 256)   # streamed-exec tile shape
     tile_batch: int = 8
+    # ------------------------------- fault tolerance (DESIGN.md §12)
+    default_deadline_ms: float | None = None  # per-request shed deadline
+    fail_fast_degraded: bool = False    # degraded server refuses admission
+    degrade_after: int = 2          # consecutive scale-out dispatch failures
+    #                                 before a bucket falls back to local
 
 
 class ImageFilterServer:
@@ -70,11 +93,15 @@ class ImageFilterServer:
         self._executor = BatchExecutor(
             interpret=self.config.interpret, pad_pow2=self.config.pad_pow2,
             devices=self.config.devices, tile=self.config.tile,
-            tile_batch=self.config.tile_batch)
+            tile_batch=self.config.tile_batch,
+            degrade_after=self.config.degrade_after)
         self._cond = threading.Condition()
         self._seq = 0
         self._closing = False
-        self._stats = {"submitted": 0, "served": 0, "failed": 0,
+        self._drain = True
+        self._healthy = True            # False once the worker catch-all fired
+        self._stats = {"submitted": 0, "served": 0, "failed": 0, "shed": 0,
+                       "fast_failed": 0, "errors": 0, "last_error": None,
                        "batches": 0, "occupancy": {}, "flush_reasons": {}}
         self._worker = threading.Thread(target=self._loop,
                                         name="repro-serve-worker", daemon=True)
@@ -84,6 +111,7 @@ class ImageFilterServer:
     def submit(self, img, filt: str, *, method: str = "refmlm",
                mult_impl: str = "auto", nbits: int = 8,
                exec: str | None = None,
+               deadline_ms: float | None = None,
                timeout: float | None = None) -> FilterFuture:
         """Admit one (H, W) grayscale image; returns its `FilterFuture`.
 
@@ -93,6 +121,12 @@ class ImageFilterServer:
         tap-product implementation, and the image a single 2-D (or
         (H, W, 1)) frame. Blocks while the server is at `max_pending`
         in-flight requests (up to `timeout`, then `ServerOverloaded`).
+
+        `deadline_ms` (default `config.default_deadline_ms`) is the §12
+        shed deadline: if the request is still queued that long after
+        admission, it is shed with `DeadlineExceeded` instead of being
+        dispatched. On a degraded server with `fail_fast_degraded`,
+        raises `ServerDegraded` without taking an admission slot.
         """
         exec_mode = self.config.exec if exec is None else exec
         if exec_mode not in EXEC_MODES:
@@ -110,6 +144,13 @@ class ImageFilterServer:
                              f"shape {arr.shape}")
         if self._closing:
             raise ServerClosed("server is closed")
+        if self.config.fail_fast_degraded and not self._is_healthy():
+            with self._cond:
+                self._stats["fast_failed"] += 1
+            raise ServerDegraded(
+                "server is degraded; refusing admission (fail_fast_degraded)")
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
         self._gate.acquire(timeout)
         future = FilterFuture()
         with self._cond:
@@ -117,10 +158,13 @@ class ImageFilterServer:
                 self._gate.release()
                 raise ServerClosed("server is closed")
             self._seq += 1
+            now = self._clock()
+            deadline = None if deadline_ms is None else now + deadline_ms / 1e3
             req = FilterRequest(img=arr, filt=filt, method=method,
                                 mult_impl=mult_impl, exec=exec_mode,
                                 nbits=int(nbits), future=future,
-                                submitted=self._clock(), seq=self._seq)
+                                submitted=now, seq=self._seq,
+                                deadline=deadline)
             self._batcher.add(req)
             self._stats["submitted"] += 1
             self._cond.notify_all()
@@ -136,8 +180,13 @@ class ImageFilterServer:
         return sweep(self._executor, shapes, filters, methods, mult_impls,
                      execs, batches, nbits=nbits)
 
+    def _is_healthy(self) -> bool:
+        """Healthy = no worker catch-all error and no exec-mode fallback."""
+        return self._healthy and not self._executor.degraded_mode
+
     def stats(self) -> dict:
-        """Counters + occupancy histogram + warm-cache ledger (a snapshot)."""
+        """Counters + occupancy histogram + warm-cache ledger + the §12
+        fault/health surface (a snapshot)."""
         with self._cond:
             snap = {k: (dict(v) if isinstance(v, dict) else v)
                     for k, v in self._stats.items()}
@@ -146,6 +195,9 @@ class ImageFilterServer:
         snap["compile"] = {"warmed": len(self._executor.warmed),
                            "hits": self._executor.hits,
                            "misses": self._executor.misses}
+        snap.update(self._executor.fault_stats())
+        snap["healthy"] = self._is_healthy()
+        snap["state"] = "healthy" if snap["healthy"] else "degraded"
         return snap
 
     def close(self, drain: bool = True, timeout: float = 60.0) -> None:
@@ -172,37 +224,71 @@ class ImageFilterServer:
         while True:
             with self._cond:
                 batches = self._batcher.ready(self._clock())
-                while not batches and not self._closing:
+                shed = self._batcher.take_shed()
+                while not batches and not shed and not self._closing:
                     deadline = self._batcher.next_deadline()
                     wait = (None if deadline is None
                             else max(deadline - self._clock(), 1e-4))
                     self._cond.wait(wait)
                     batches = self._batcher.ready(self._clock())
-                if self._closing and not batches:
+                    shed = self._batcher.take_shed()
+                closing = self._closing
+                if closing and not batches:
                     batches = self._batcher.drain()
-                    if not batches:
-                        return
-                    if not self._drain:
-                        for b in batches:
-                            for req in b.requests:
-                                req.future.set_exception(
-                                    ServerClosed("server closed undrained"))
-                            self._gate.release(len(b.requests))
-                        return
+                    shed += self._batcher.take_shed()
+                drain = self._drain
+            self._fail_shed(shed)
+            if closing and not drain:
+                for b in batches:
+                    self._fail_batch(b, ServerClosed("server closed undrained"))
+                return
             for batch in batches:
                 self._run(batch)
+            if closing and not batches:
+                return
+
+    def _fail_shed(self, shed) -> None:
+        """Fail expired requests with DeadlineExceeded and free their
+        slots -- they never reach a dispatch (DESIGN.md §12)."""
+        if not shed:
+            return
+        for req in shed:
+            if not req.future.done():
+                req.future.set_exception(DeadlineExceeded(
+                    f"request seq={req.seq} shed: deadline expired before "
+                    f"dispatch (bucket {req.key})"))
+        with self._cond:
+            self._stats["shed"] += len(shed)
+        self._gate.release(len(shed))
+
+    def _fail_batch(self, batch: MicroBatch, err: BaseException) -> None:
+        for req in batch.requests:
+            if not req.future.done():
+                req.future.set_exception(err)
+        self._gate.release(len(batch.requests))
 
     def _run(self, batch: MicroBatch) -> None:
-        self._executor.run(batch)        # fulfils every future exactly once
-        failed = batch.requests[0].future._error is not None
+        try:
+            self._executor.run(batch)    # fulfils every future exactly once
+        except BaseException as err:     # noqa: BLE001 -- §12 catch-all:
+            # run() never raises by contract, but a serving-layer bug must
+            # degrade the server, not hang its futures or leak its slots
+            for req in batch.requests:
+                if not req.future.done():
+                    req.future.set_exception(err)
+            with self._cond:
+                self._healthy = False
+                self._stats["errors"] += 1
+                self._stats["last_error"] = repr(err)
+        served = sum(1 for r in batch.requests if not r.future.failed())
         with self._cond:
             self._stats["batches"] += 1
             occ = self._stats["occupancy"]
             occ[len(batch.requests)] = occ.get(len(batch.requests), 0) + 1
             fr = self._stats["flush_reasons"]
             fr[batch.reason] = fr.get(batch.reason, 0) + 1
-            self._stats["failed" if failed else "served"] += len(
-                batch.requests)
+            self._stats["served"] += served
+            self._stats["failed"] += len(batch.requests) - served
         self._gate.release(len(batch.requests))
 
 
