@@ -34,6 +34,23 @@ injected throughput ratio -- the price of isolating a poisoned request
 poisoned request (neighbors bit-identical), shed an expired deadline
 without burning a dispatch, resume a half-journaled stream to the exact
 cold-run bytes, and end with a drained server reporting healthy.
+
+The service-level scenario (DESIGN.md §13) runs an **overload**: offered
+load far above the weighted admission bound, a mixed priority cycle
+(half the traffic low-priority, high-priority requests carrying a tight
+`slo_ms`), and `overload_shed=True` so blocked admissions sweep queued
+low-priority work instead of stalling everyone. The same load runs twice
+-- static flush policy vs `adaptive=True` -- into the
+`serve_slo_static` / `serve_slo_adaptive` rows (per-priority p50/p95/p99,
+shed/rejected counts, the controller's chosen flush sizes) and the
+`serve_slo_high_p99_gain` ratio row: how much of the high-priority tail
+the SLO-aware controller claws back from the throughput-tuned static
+deadline. ``--smoke-slo`` is the `scripts/check.sh --smoke-slo` guard:
+under overload the highest priority class is never shed, the adaptive
+high-priority p99 must fit the SLO bound (and beat static), aggregate
+throughput must not collapse vs static, every served byte must equal the
+direct `apply_filter` call, and a pool member whose scale-out mesh is
+killed must drain to the survivor with zero client-visible failures.
 """
 from __future__ import annotations
 
@@ -56,7 +73,15 @@ from repro.runtime.fault import (
     InjectedFault,
     fault_scope,
 )
-from repro.serve import DeadlineExceeded, ImageFilterServer, ServerConfig
+from repro.serve import (
+    PRIORITIES,
+    DeadlineExceeded,
+    ImageFilterServer,
+    ServerConfig,
+    ServerOverloaded,
+    bucket_key,
+)
+from repro.serve.pool import rendezvous_score
 
 #: (shape, filter) mix of the load: two buckets per shape family.
 DEFAULT_MIX = (((128, 128), "gaussian5"), ((128, 128), "sobel_x"),
@@ -205,6 +230,159 @@ def bench_fault(*, clients: int = 4, per_client: int = 25, mix=DEFAULT_MIX,
     return runs
 
 
+#: §13 overload priority cycle: half the offered load is low-priority
+#: (the sheddable class), a quarter high-priority with a tight SLO.
+SLO_CYCLE = ("high", "low", "normal", "low")
+
+
+def run_slo_load(*, adaptive: bool, clients: int, per_client: int, mix,
+                 max_batch: int = 8, max_delay_ms: float = 50.0,
+                 max_pending: int = 8, slo_ms: float = 25.0,
+                 check_identity: bool = False) -> dict:
+    """One §13 overload run: offered load >> the weighted admission bound.
+
+    Each client submits its whole stream (coalesced discipline) cycling
+    priorities through `SLO_CYCLE`; high-priority requests carry `slo_ms`.
+    `overload_shed=True`, so a blocked admission sweeps queued
+    low-priority work (`ServerOverloaded` on the swept futures -- clients
+    tolerate it, at the gate and on the future alike). The static flush
+    deadline is deliberately throughput-tuned (long): the adaptive run
+    must win the high-priority tail back from it via the SLO budget.
+
+    Returns per-priority **post-admission** latencies (successes only;
+    admission is where the §13 SLO clock starts, so this is the latency a
+    flush policy can actually govern -- pre-admission blocking is the
+    gate's backpressure, priced by the shed/rejected counts), throughput,
+    server stats, and -- with `check_identity` -- the count of served
+    outputs that differ from the direct `apply_filter` call (must be
+    0)."""
+    cfg = ServerConfig(max_batch=max_batch, max_delay_ms=max_delay_ms,
+                       max_pending=max_pending, adaptive=adaptive,
+                       overload_shed=True)
+    rng = np.random.default_rng(0)
+    streams = [_requests(rng, per_client, mix) for _ in range(clients)]
+    lat = {p: [] for p in PRIORITIES}
+    shed = {p: 0 for p in PRIORITIES}
+    rejected = {p: 0 for p in PRIORITIES}
+    done: list[tuple[np.ndarray, str, object]] = []   # identity check
+    served_pix = [0]
+    lock = threading.Lock()
+
+    waiters: list[threading.Thread] = []
+
+    def wait_one(t0, pri, img, filt, fut):
+        # one waiter per admitted request, so dt is measured at the
+        # future's actual fulfilment: a gather-in-submission-order loop
+        # would charge a fast high-priority result for the time the
+        # client spent blocked on an earlier slow low-priority future
+        try:
+            fut.result(300)
+        except ServerOverloaded:
+            with lock:
+                shed[pri] += 1
+            return
+        dt = (time.perf_counter() - t0) * 1e3
+        with lock:
+            lat[pri].append(dt)
+            served_pix[0] += img.size
+            if check_identity:
+                done.append((img, filt, fut))
+
+    def client(ci, stream):
+        for i, (img, filt) in enumerate(stream):
+            pri = SLO_CYCLE[(ci + i) % len(SLO_CYCLE)]
+            kw = {"priority": pri, "tenant": f"t{ci % 2}"}
+            if pri == "high":
+                kw["slo_ms"] = slo_ms
+            try:
+                fut = srv.submit(img, filt, **kw)
+            except ServerOverloaded:
+                with lock:
+                    rejected[pri] += 1
+                continue
+            # latency clock starts at ADMISSION, like the §13 SLO clock
+            # (`req.submitted`): pre-admission blocking is the gate's
+            # backpressure, priced by the shed/rejected counts instead
+            w = threading.Thread(target=wait_one,
+                                 args=(time.perf_counter(), pri, img, filt,
+                                       fut))
+            w.start()
+            with lock:
+                waiters.append(w)
+
+    with ImageFilterServer(cfg) as srv:
+        shapes = sorted({shape for shape, _ in mix})
+        filters = sorted({filt for _, filt in mix})
+        batches = sorted({1 << k for k in range(max_batch.bit_length())})
+        srv.warmup(shapes, filters, batches=batches, priorities=PRIORITIES)
+        threads = [threading.Thread(target=client, args=(ci, s))
+                   for ci, s in enumerate(streams)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for w in waiters:
+            w.join()
+        wall_s = time.perf_counter() - t0
+        stats = srv.stats()
+        mismatches = sum(
+            1 for img, filt, fut in done
+            if not (fut.result(60) == np.asarray(apply_filter(img, filt))).all())
+    # conservation: every admitted request is served or overload-shed
+    assert stats["failed"] == 0, "requests failed outright under overload"
+    assert stats["served"] + stats["shed_overload"] == stats["submitted"], \
+        "requests went missing"
+    assert lat["high"], "no high-priority request ever succeeded"
+    return {"lat_ms": lat, "shed": shed, "rejected": rejected,
+            "wall_s": wall_s, "mpix_s": served_pix[0] / wall_s / 1e6,
+            "stats": stats, "mismatches": mismatches}
+
+
+def _emit_slo_run(name: str, run: dict, **extra) -> None:
+    """One `serve_slo_*` row: mean/percentile latency **per priority
+    class**, shed/rejected counts, throughput, and (adaptive runs) the
+    controller's chosen-flush-size histogram + decision count."""
+    st = run["stats"]
+    all_ms = [d for v in run["lat_ms"].values() for d in v]
+    fields = {}
+    for pri in PRIORITIES:
+        for k, v in percentiles(run["lat_ms"][pri]).items():
+            fields[f"{pri}_{k}"] = v
+    ctrl = st.get("controller")
+    if ctrl:
+        hist: dict[int, int] = {}
+        for n in ctrl["chosen"].values():
+            hist[n] = hist.get(n, 0) + 1
+        fields["sizes"] = ",".join(f"{n}:{c}" for n, c in sorted(hist.items()))
+        fields["slo_decisions"] = ctrl["decisions"]
+    emit(name, float(np.mean(all_ms)) * 1e3,
+         mpix_s=round(run["mpix_s"], 3),
+         shed=st["shed_overload"], rejected=st["rejected"],
+         served=st["served"], **fields, **extra)
+
+
+def bench_slo(*, clients: int = 6, per_client: int = 12, mix=DEFAULT_MIX,
+              max_batch: int = 8, max_delay_ms: float = 50.0,
+              max_pending: int = 8, slo_ms: float = 25.0,
+              tag: str = "serve_slo_") -> dict:
+    """The §13 static-vs-adaptive overload pair + the tail-gain row."""
+    runs = {}
+    for label, adaptive in (("static", False), ("adaptive", True)):
+        runs[label] = run_slo_load(adaptive=adaptive, clients=clients,
+                                   per_client=per_client, mix=mix,
+                                   max_batch=max_batch,
+                                   max_delay_ms=max_delay_ms,
+                                   max_pending=max_pending, slo_ms=slo_ms)
+        _emit_slo_run(f"{tag}{label}", runs[label], clients=clients,
+                      offered=clients * per_client, slo_ms=slo_ms)
+    hi_p99 = {k: percentiles(r["lat_ms"]["high"])["p99"]
+              for k, r in runs.items()}
+    emit(f"{tag}high_p99_gain", hi_p99["static"] / hi_p99["adaptive"],
+         "x_static_vs_adaptive_high_p99")
+    return runs
+
+
 def _identity_spot_check(mix) -> bool:
     """A served output must be byte-for-byte the direct apply_filter call."""
     rng = np.random.default_rng(7)
@@ -339,10 +517,107 @@ def smoke_fault() -> int:
     return rc
 
 
+def smoke_slo() -> int:
+    """Reduced-size §13 service-level guards (scripts/check.sh
+    --smoke-slo): under overload the high class is never shed, the
+    adaptive controller holds the high-priority tail inside the SLO (and
+    beats the throughput-tuned static deadline) without collapsing
+    throughput, every served byte equals the direct call, and a pool
+    member whose scale-out mesh dies drains to the survivor with zero
+    client-visible failures."""
+    rc = 0
+    slo_ms, max_delay_ms = 25.0, 80.0
+    runs = {}
+    for label, adaptive in (("static", False), ("adaptive", True)):
+        runs[label] = run_slo_load(adaptive=adaptive, clients=4,
+                                   per_client=8, mix=SMOKE_MIX,
+                                   max_batch=8, max_delay_ms=max_delay_ms,
+                                   max_pending=4, slo_ms=slo_ms,
+                                   check_identity=True)
+
+    # -- guard 1: overload engaged, and only below the top class
+    for label, run in runs.items():
+        pressure = run["stats"]["shed_overload"] + sum(run["rejected"].values())
+        hi_dropped = run["shed"]["high"] + run["rejected"]["high"]
+        print(f"# smoke-slo[{label}]: shed={run['stats']['shed_overload']} "
+              f"rejected={sum(run['rejected'].values())} "
+              f"high_dropped={hi_dropped}")
+        if pressure == 0:
+            print(f"# FAIL: {label} run never overloaded -- guard is vacuous")
+            rc = 1
+        if hi_dropped:
+            print(f"# FAIL: {label} run dropped high-priority work")
+            rc = 1
+
+    # -- guard 2: adaptive holds the high tail inside the SLO, beats the
+    # throughput-tuned static deadline, and does not collapse throughput
+    hi_p99 = {k: percentiles(r["lat_ms"]["high"])["p99"]
+              for k, r in runs.items()}
+    bound_ms = 2 * slo_ms           # generous: controller targets slo_ms
+    print(f"# smoke-slo: high p99 static {hi_p99['static']:.1f} ms vs "
+          f"adaptive {hi_p99['adaptive']:.1f} ms "
+          f"(slo {slo_ms:.0f} ms, bound {bound_ms:.0f} ms)")
+    if hi_p99["adaptive"] > bound_ms:
+        print("# FAIL: adaptive high-priority p99 blew the SLO bound")
+        rc = 1
+    if hi_p99["adaptive"] >= hi_p99["static"]:
+        print("# FAIL: adaptive high-priority tail no better than static")
+        rc = 1
+    ctrl = runs["adaptive"]["stats"]["controller"]
+    if ctrl["decisions"] == 0:
+        print("# FAIL: the adaptive controller never saw an SLO decision")
+        rc = 1
+    tput = runs["adaptive"]["mpix_s"] / runs["static"]["mpix_s"]
+    print(f"# smoke-slo: adaptive throughput {tput:.2f}x static "
+          f"(floor 0.7x)")
+    if tput < 0.7:
+        print("# FAIL: SLO-aware batching collapsed aggregate throughput")
+        rc = 1
+
+    # -- guard 3: every served byte equals the direct apply_filter call
+    mism = {k: r["mismatches"] for k, r in runs.items()}
+    print(f"# smoke-slo: served-vs-direct mismatches {mism}")
+    if any(mism.values()):
+        print("# FAIL: a served output differs from direct apply_filter")
+        rc = 1
+
+    # -- guard 4: a pool member whose scale-out mesh dies is drained and
+    # its buckets re-rendezvous to the survivor, zero failures visible
+    rng = np.random.default_rng(5)
+    imgs = [rng.integers(0, 256, (32, 32)).astype(np.int32)
+            for _ in range(6)]
+    key = bucket_key("gaussian3", "refmlm", "auto", "sharded", 8, 32, 32,
+                     "normal")
+    target = max(("m0", "m1"), key=lambda m: rendezvous_score(m, key))
+    inj = FaultInjector().on_key(SITE_EXECUTE,
+                                 f"exec=sharded|member={target}")
+    cfg = ServerConfig(max_batch=2, max_delay_ms=3600_000.0, exec="sharded",
+                       pool=((0,), (0,)), degrade_after=1, drain_after=2)
+    with fault_scope(inj), ImageFilterServer(cfg) as srv:
+        futs = [srv.submit(im, "gaussian3") for im in imgs]
+        srv.close(drain=True)
+        st = srv.stats()
+    pool = st["pool"]
+    ok = all((f.result(60) == np.asarray(apply_filter(im, "gaussian3"))).all()
+             for im, f in zip(imgs, futs))
+    ok &= pool["drains"] == 1 and pool["active"] == 1
+    ok &= pool["members"][target]["state"] == "dead"
+    ok &= st["healthy"]
+    print(f"# smoke-slo: member {target} mesh killed -> drains="
+          f"{pool['drains']} active={pool['active']} "
+          f"state={pool['members'][target]['state']} healthy={st['healthy']} "
+          f"served bit-identically: {bool(ok)}")
+    if not ok:
+        print("# FAIL: pool failover lost a byte or left the member alive")
+        rc = 1
+    return rc
+
+
 def main() -> None:
     bench(clients=4, per_client=16, mix=DEFAULT_MIX, max_batch=8,
           max_delay_ms=2.0)
     bench_fault(clients=4, per_client=25, mix=DEFAULT_MIX)
+    bench_slo(clients=6, per_client=12, mix=DEFAULT_MIX)
 
 
 if __name__ == "__main__":
@@ -350,5 +625,7 @@ if __name__ == "__main__":
         sys.exit(smoke())
     if "--smoke-fault" in sys.argv[1:]:
         sys.exit(smoke_fault())
+    if "--smoke-slo" in sys.argv[1:]:
+        sys.exit(smoke_slo())
     main()
     write_bench_json("BENCH_serve.json", prefix="serve_")

@@ -6,6 +6,7 @@
 #   scripts/check.sh --smoke-serve  serving SLO guard only (DESIGN.md §10)
 #   scripts/check.sh --smoke-tune   plan-tuning guard only (DESIGN.md §11)
 #   scripts/check.sh --smoke-fault  fault-tolerance guard only (DESIGN.md §12)
+#   scripts/check.sh --smoke-slo    service-level guard only (DESIGN.md §13)
 #
 # The perf smoke runs benchmarks/kernel_bench.py --smoke on a reduced size
 # and fails if (a) the KCM constant-coefficient path is slower than the
@@ -40,6 +41,15 @@
 # dispatch, a stream killed mid-run must resume from its tile journal to
 # the exact cold-run bytes, and a drained server must end reporting
 # healthy.
+#
+# The service-level smoke (--smoke-slo, serve_bench.py --smoke-slo) is the
+# DESIGN.md §13 guard: under an overload run the highest priority class is
+# never shed, the adaptive controller must hold the high-priority p99
+# inside the SLO bound (and beat the throughput-tuned static deadline)
+# without collapsing aggregate throughput, every served output must equal
+# the direct apply_filter call byte for byte, and a pool member whose
+# scale-out mesh is killed must drain to the survivor with zero
+# client-visible failures.
 #
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
@@ -89,6 +99,11 @@ if [[ "${1:-}" == "--smoke-fault" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--smoke-slo" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke-slo
+  exit 0
+fi
+
 lint
 if [[ "${1:-}" == "--lint" ]]; then
   exit 0
@@ -109,3 +124,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smo
 
 echo "== fault-tolerance smoke (serve_bench --smoke-fault) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke-fault
+
+echo "== service-level smoke (serve_bench --smoke-slo) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke-slo

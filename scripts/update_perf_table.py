@@ -52,6 +52,10 @@ ROWS = [
      "online serving, 4-client mixed load, sequential submission (µs = mean request latency)"),
     ("serve_coalesced",
      "online serving, 4-client mixed load, **coalesced micro-batching** (§10)"),
+    ("serve_slo_static",
+     "overloaded serving, mixed priorities, static flush policy (µs = mean post-admission latency)"),
+    ("serve_slo_adaptive",
+     "overloaded serving, mixed priorities, **SLO-adaptive batching + priority shedding** (§13)"),
 ]
 SPEEDUPS = [
     ("kernel_bank_gaussian5_kcm_speedup", "KCM vs recursion"),
@@ -63,6 +67,8 @@ SPEEDUPS = [
     ("kernel_dist_gaussian5_sharded_speedup", "sharded vs local (n=32, §9)"),
     ("serve_coalesce_speedup",
      "coalesced vs sequential serving throughput (§10)"),
+    ("serve_slo_high_p99_gain",
+     "static vs adaptive high-priority p99 under overload (§13)"),
 ]
 
 

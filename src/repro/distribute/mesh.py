@@ -21,6 +21,8 @@ the conv passes -- and therefore the block-shape tuning cache
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 import numpy as np
 from jax.sharding import Mesh
@@ -34,6 +36,18 @@ ROWS_AXIS = "rows"
 
 def device_count() -> int:
     return len(jax.devices())
+
+
+def devices_by_id(ids: Sequence[int]) -> list:
+    """The jax devices named by `ids`, in id order (the §13 elastic pool's
+    device-subset vocabulary: a pool member's mesh is built from explicit
+    ids, so a rebuilt mesh can exclude exactly the lost devices)."""
+    by_id = {d.id: d for d in jax.devices()}
+    missing = [i for i in ids if int(i) not in by_id]
+    if missing:
+        raise ValueError(f"unknown device ids {missing}; visible ids are "
+                         f"{sorted(by_id)}")
+    return [by_id[int(i)] for i in ids]
 
 
 def auto_mesh_shape(ndev: int, n: int) -> tuple[int, int]:
@@ -51,24 +65,32 @@ def auto_mesh_shape(ndev: int, n: int) -> tuple[int, int]:
     return nb, ndev // nb
 
 
-def filter_mesh(devices: int | None = None,
+def filter_mesh(devices: int | Sequence[int] | None = None,
                 mesh_shape: tuple[int, int] | None = None,
                 *, n: int = 1) -> Mesh:
     """Build the (batch, rows) mesh for a sharded filter run.
 
-    `devices` -- how many of `jax.devices()` to use (None = all);
+    `devices` -- how many of `jax.devices()` to use (None = all), or an
+    explicit sequence of device *ids* (the §13 elastic pool's device
+    subsets: a pool member's mesh is pinned to its own devices, and a
+    rebuilt mesh names exactly the surviving ids);
     `mesh_shape` -- explicit (batch_shards, row_shards), must multiply to
     the device count used; None picks `auto_mesh_shape` for a batch of `n`.
     """
-    avail = jax.devices()
+    if isinstance(devices, (list, tuple)):
+        avail = devices_by_id(devices)
+        count = len(avail)
+    else:
+        avail = jax.devices()
+        count = int(devices) if devices is not None else len(avail)
     if mesh_shape is not None:
         nb, nr = int(mesh_shape[0]), int(mesh_shape[1])
         need = nb * nr
-        if devices is not None and int(devices) != need:
+        if need != count and devices is not None:
             raise ValueError(f"mesh_shape {mesh_shape} needs {need} devices, "
                              f"but devices={devices} was requested")
     else:
-        need = int(devices) if devices is not None else len(avail)
+        need = count
         nb, nr = auto_mesh_shape(need, n)
     if need > len(avail):
         raise ValueError(
@@ -106,4 +128,5 @@ def shard_local_shape(n: int, h: int, w: int, nb: int, nr: int,
 
 
 __all__ = ["BATCH_AXIS", "ROWS_AXIS", "auto_mesh_shape", "device_count",
-           "filter_mesh", "shard_dims", "shard_local_shape"]
+           "devices_by_id", "filter_mesh", "shard_dims",
+           "shard_local_shape"]

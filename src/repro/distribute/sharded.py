@@ -35,7 +35,7 @@ the zero halo the local path reads anyway and are cropped from the output
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -117,7 +117,7 @@ def _embed_windows(imgs: Array, ph: int, nr: int, hl: int) -> Array:
 
 
 def sharded_call(pass_fn: Callable, pass_key: tuple, imgs: Array, ph: int, *,
-                 devices: int | None = None,
+                 devices: int | Sequence[int] | None = None,
                  mesh_shape: tuple[int, int] | None = None,
                  halo: str = "exchange") -> Array:
     """Run `pass_fn` (an (N, H, W) -> (N, H, W) map needing ph halo rows)
@@ -136,9 +136,14 @@ def sharded_call(pass_fn: Callable, pass_key: tuple, imgs: Array, ph: int, *,
     n2, h2, hl = shard_dims(n, h, nb, nr, ph)
     # §12 chaos hook: one probe per participating shard before dispatch --
     # a matching rule models that shard's host/device failing the whole
-    # collective call (which is how a lost mesh member actually presents)
-    for shard in range(nb * nr):
-        fault_probe(SITE_SHARD, key=f"{pass_key[0]}/{halo}", index=shard)
+    # collective call (which is how a lost mesh member actually presents).
+    # The key carries the shard's *global device id* (§13): a rule keyed
+    # `dev<id>` models that one device dying, which is what lets the
+    # elastic pool's per-device probe find the survivors
+    # (repro.runtime.elastic.surviving_devices).
+    for shard, dev in enumerate(mesh.devices.flat):
+        fault_probe(SITE_SHARD, key=f"{pass_key[0]}/{halo}/dev{dev.id}",
+                    index=shard)
     x = jnp.asarray(imgs)
     if n2 != n or h2 != h:
         x = jnp.pad(x, ((0, n2 - n), (0, h2 - h), (0, 0)))
@@ -160,7 +165,7 @@ def _taps_key(taps) -> tuple:
     return (a.shape, tuple(a.reshape(-1).tolist()))
 
 
-def sharded_conv2d_pass(imgs: Array, taps, *, devices: int | None = None,
+def sharded_conv2d_pass(imgs: Array, taps, *, devices: int | Sequence[int] | None = None,
                         mesh_shape: tuple[int, int] | None = None,
                         halo: str = "exchange", **kw) -> Array:
     """`repro.filters.conv.conv2d_pass` over the (batch, rows) mesh --
@@ -175,7 +180,7 @@ def sharded_conv2d_pass(imgs: Array, taps, *, devices: int | None = None,
 
 
 def sharded_fused_separable_pass(imgs: Array, row, col, *,
-                                 devices: int | None = None,
+                                 devices: int | Sequence[int] | None = None,
                                  mesh_shape: tuple[int, int] | None = None,
                                  halo: str = "exchange", **kw) -> Array:
     """`repro.filters.conv.fused_separable_pass` over the mesh."""
@@ -193,7 +198,7 @@ def _spec_key(spec: FilterSpec) -> tuple:
 
 
 def sharded_apply_filter(imgs: Array, filt: FilterSpec | str, *,
-                         devices: int | None = None,
+                         devices: int | Sequence[int] | None = None,
                          mesh_shape: tuple[int, int] | None = None,
                          halo: str = "exchange", **kw) -> Array:
     """`repro.filters.apply_filter` over the (batch, rows) mesh.

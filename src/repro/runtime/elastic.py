@@ -1,20 +1,67 @@
-"""Elastic scaling: restore a checkpoint taken on mesh A onto mesh B.
+"""Elastic scaling: rebuild on the devices that are still alive.
 
-Checkpoints store unsharded logical arrays (checkpoint.py), so elasticity is
-"re-derive shardings on the new mesh, device_put". This is the single-
-controller analogue of Pathways-style re-meshing: a pod drops out -> rebuild
-the mesh from the surviving devices -> restore -> continue (data order stays
-deterministic because batches are pure functions of step).
+Two consumers share the idea (DESIGN.md §13):
+
+  * **training** -- restore a checkpoint taken on mesh A onto mesh B.
+    Checkpoints store unsharded logical arrays (checkpoint.py), so
+    elasticity is "re-derive shardings on the new mesh, device_put". This
+    is the single-controller analogue of Pathways-style re-meshing: a pod
+    drops out -> rebuild the mesh from the surviving devices -> restore ->
+    continue (data order stays deterministic because batches are pure
+    functions of step).
+  * **serving** -- the §13 elastic executor pool (`repro.serve.pool`)
+    needs the *discovery* half only: `probe_device` runs a trivial
+    one-device sharded dispatch on a single id, and `surviving_devices`
+    filters a member's id set down to the ids that still complete one.
+    Serving state is per-request (no checkpoint to restore), so a pool
+    member's "restore" is just a fresh `BatchExecutor` over the surviving
+    ids -- every output stays bit-identical because the sharded path is
+    bit-identical on any mesh (DESIGN.md §9).
+
+The probes run under the §12 chaos harness: the sharded dispatch path
+probes `SITE_SHARD` with a `dev<id>`-suffixed key per participating
+device, so an injector rule `on_key(SITE_SHARD, "dev3")` deterministically
+models device 3 dying -- to the filter traffic AND to these probes.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 from jax.sharding import Mesh
 
 from repro.checkpoint import latest_step, restore
 from repro.runtime import sharding as shd
+
+
+def probe_device(device_id: int) -> bool:
+    """True iff `device_id` completes one trivial sharded dispatch.
+
+    The probe is a (1, 1) mesh over exactly this id running an identity
+    pass, so it exercises the same `SITE_SHARD` chaos hook (key suffix
+    `dev<id>`) the real filter traffic does: an injected "device died"
+    rule fails the probe exactly like it fails the member's dispatches.
+    A genuinely missing id (not in `jax.devices()`) also reports False.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.distribute.sharded import sharded_call
+
+    try:
+        out = sharded_call(lambda x: x, ("probe",),
+                           jnp.zeros((1, 4, 4), jnp.int32), 0,
+                           devices=[int(device_id)], mesh_shape=(1, 1))
+        np.asarray(out)                 # force execution, not just tracing
+        return True
+    except Exception:                                      # noqa: BLE001
+        return False
+
+
+def surviving_devices(device_ids: Sequence[int]) -> tuple[int, ...]:
+    """The subset of `device_ids` that still complete a probe dispatch --
+    the id set a drained pool member's mesh is rebuilt from (§13)."""
+    return tuple(i for i in device_ids if probe_device(i))
 
 
 def remesh_restore(ckpt_dir: str, abstract_state, cfg, new_mesh: Mesh,
@@ -38,3 +85,7 @@ def state_shardings(abstract_state, cfg, mesh: Mesh, *, multi_pod: bool):
                                  multi_pod=multi_pod)
              if abstract_state.ef is not None else None)
     return TrainState(shd.scalar_sharding(mesh), params_sh, opt_sh, ef_sh)
+
+
+__all__ = ["probe_device", "remesh_restore", "state_shardings",
+           "surviving_devices"]

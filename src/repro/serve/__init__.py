@@ -2,28 +2,41 @@
 (DESIGN.md §10): a request queue with admission control, a shape-bucketed
 micro-batcher coalescing concurrent same-shape requests into one batched
 `apply_filter` call (riding the §8 batch fold), exec-mode routing through
-`repro.distribute` (§9), and a warm-start compile cache.
+`repro.distribute` (§9), a warm-start compile cache, and the §13
+service-level machinery (SLO-adaptive batching, priorities/quotas, the
+elastic executor pool).
 
 Layers:
-  request.py   -- `FilterRequest` / `FilterFuture`, the coalescing
-                  `bucket_key` and the warm-cache `serve_key`;
-  admission.py -- in-flight bound + backpressure (`AdmissionGate`,
-                  `ServerOverloaded`);
-  batcher.py   -- the pure flush-policy state machine
-                  (`ShapeBucketedBatcher`: size / deadline / drain);
-  executor.py  -- micro-batch -> `apply_filter_batch` dispatch with the
-                  per-bucket grid-resolution memo and pow-2 batch rounding;
-  server.py    -- `ImageFilterServer` (worker thread, `submit`, stats);
-  warmup.py    -- `python -m repro.serve.warmup` deploy-time pre-compiler.
+  request.py    -- `FilterRequest` / `FilterFuture`, the coalescing
+                   `bucket_key` and the warm-cache `serve_key`, the §13
+                   priority classes and weighted admission accounting;
+  admission.py  -- weighted in-flight bound + per-tenant quotas +
+                   backpressure (`AdmissionGate`, `ServerOverloaded`,
+                   `TenantOverQuota`);
+  batcher.py    -- the pure flush-policy state machine
+                   (`ShapeBucketedBatcher`: size / deadline / drain,
+                   priority-ordered flushes, deadline/overload shedding);
+  controller.py -- `AdaptiveBatchController`, the §13 target-latency
+                   feedback loop picking per-bucket flush size/deadline
+                   from the warm plan-cost ledger;
+  executor.py   -- micro-batch -> `apply_filter_batch` dispatch with the
+                   LRU plan memo, pow-2 batch rounding, and the §12
+                   bisection / degraded-fallback machinery;
+  pool.py       -- `ExecutorPool`, rendezvous-routed executors over
+                   device subsets with probe-and-rebuild failover;
+  server.py     -- `ImageFilterServer` (worker thread, `submit`, stats);
+  warmup.py     -- `python -m repro.serve.warmup` deploy-time pre-compiler.
 
     from repro.serve import ImageFilterServer, ServerConfig
-    with ImageFilterServer(ServerConfig(max_batch=8)) as srv:
-        fut = srv.submit(img, "gaussian5", method="refmlm")
+    with ImageFilterServer(ServerConfig(max_batch=8, adaptive=True)) as srv:
+        fut = srv.submit(img, "gaussian5", method="refmlm",
+                         priority="high", slo_ms=50.0)
         out = fut.result()   # bit-identical to apply_filter(img, ...)
 
 The load-bearing guarantee is paper faithfulness end to end: a request's
-output is bit-identical no matter which coalesced batch, bucket, or exec
-mode served it (tests/test_serve.py).
+output is bit-identical no matter which coalesced batch, bucket, exec
+mode, or pool member served it (tests/test_serve.py,
+tests/test_serve_slo.py).
 """
 from __future__ import annotations
 
@@ -32,34 +45,55 @@ from repro.serve.admission import (
     ServerClosed,
     ServerDegraded,
     ServerOverloaded,
+    TenantOverQuota,
 )
-from repro.serve.batcher import FLUSH_REASONS, MicroBatch, ShapeBucketedBatcher
+from repro.serve.batcher import (
+    FLUSH_REASONS,
+    SHED_CAUSES,
+    FlushPolicy,
+    MicroBatch,
+    ShapeBucketedBatcher,
+    ShedRequest,
+)
+from repro.serve.controller import AdaptiveBatchController
 from repro.serve.executor import SCALE_OUT_MODES, BatchExecutor, next_pow2
+from repro.serve.pool import ExecutorPool, PoolMember
 from repro.serve.request import (
+    PRIORITIES,
     DeadlineExceeded,
     FilterFuture,
     FilterRequest,
     bucket_key,
+    request_weight,
     serve_key,
 )
 from repro.serve.server import ImageFilterServer, ServerConfig
 
 __all__ = [
     "FLUSH_REASONS",
+    "PRIORITIES",
     "SCALE_OUT_MODES",
+    "SHED_CAUSES",
+    "AdaptiveBatchController",
     "AdmissionGate",
     "BatchExecutor",
     "DeadlineExceeded",
+    "ExecutorPool",
     "FilterFuture",
     "FilterRequest",
+    "FlushPolicy",
     "ImageFilterServer",
     "MicroBatch",
+    "PoolMember",
     "ServerClosed",
     "ServerConfig",
     "ServerDegraded",
     "ServerOverloaded",
     "ShapeBucketedBatcher",
+    "ShedRequest",
+    "TenantOverQuota",
     "bucket_key",
     "next_pow2",
+    "request_weight",
     "serve_key",
 ]

@@ -1,21 +1,44 @@
-"""Admission control for the serving queue (DESIGN.md §10).
+"""Admission control for the serving queue (DESIGN.md §10/§13).
 
-The gate bounds the number of *in-flight* requests -- admitted but not yet
-completed -- so a traffic burst turns into client-side backpressure
-(`submit` blocking, then `ServerOverloaded`) instead of unbounded queue
-growth. A slot is held from admission until the request's future is
-fulfilled, so the bound covers queued AND executing work: the server's
-peak memory is `max_pending` images plus one micro-batch.
+The gate bounds the *weighted* number of in-flight requests -- admitted
+but not yet completed -- so a traffic burst turns into client-side
+backpressure (`submit` blocking, then `ServerOverloaded`) instead of
+unbounded queue growth. A slot is held from admission until the request's
+future is fulfilled, so the bound covers queued AND executing work: the
+server's peak memory is `max_pending` weight units of images plus one
+micro-batch.
+
+§13 extends the single counter with **weighted slot accounting and
+per-tenant quotas**: each request charges `weight` slots
+(`repro.serve.request.request_weight` -- proportional to its pixel count,
+so a satellite frame cannot hide behind a thumbnail's slot) against both
+the global `max_pending` bound and its tenant's `tenant_quota`. A tenant
+at quota blocks (then raises `TenantOverQuota`) while other tenants keep
+admitting -- one bulk tenant can no longer starve the latency-sensitive
+one. Acquisition is all-or-nothing: a request never holds global slots
+while waiting for tenant headroom, so two tenants cannot deadlock the
+gate.
+
+`on_wait(weight)` is the §13 overload signal: it fires (outside the gate
+lock) whenever an acquire of `weight` slots is about to block, letting
+the server wake its worker to shed low-priority queued work instead of
+keeping a high-priority submitter waiting behind it.
 """
 from __future__ import annotations
 
 import threading
 import time
+from typing import Callable
 
 
 class ServerOverloaded(RuntimeError):
     """Admission timed out: the server is at `max_pending` in-flight
-    requests and none completed within the admission timeout."""
+    weighted slots and none freed up within the admission timeout."""
+
+
+class TenantOverQuota(ServerOverloaded):
+    """Admission timed out on the *tenant* bound: this tenant is at its
+    per-tenant in-flight quota (other tenants may still be admitting)."""
 
 
 class ServerClosed(RuntimeError):
@@ -30,18 +53,32 @@ class ServerDegraded(RuntimeError):
 
 
 class AdmissionGate:
-    """Counting gate over in-flight requests with a bounded blocking wait."""
+    """Weighted counting gate with per-tenant quotas and a bounded wait."""
 
     def __init__(self, max_pending: int, timeout_s: float,
-                 clock=time.monotonic) -> None:
+                 clock=time.monotonic, *,
+                 tenant_quota: int | None = None,
+                 tenant_quotas: dict[str, int] | None = None,
+                 on_wait: Callable[[int], None] | None = None) -> None:
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = int(max_pending)
         self.timeout_s = float(timeout_s)
+        self.tenant_quota = None if tenant_quota is None else int(tenant_quota)
+        self.tenant_quotas = dict(tenant_quotas or {})
+        self.on_wait = on_wait
         self._clock = clock
         self._cond = threading.Condition()
-        self._inflight = 0
+        self._inflight = 0                       # weighted slots
+        self._tenants: dict[str, int] = {}       # tenant -> weighted slots
         self._rejected = 0
+        self._quota_rejected: dict[str, int] = {}
+
+    def quota_for(self, tenant: str) -> int:
+        """The tenant's weighted in-flight cap (explicit > uniform > the
+        global bound -- quotas can only narrow admission, never widen)."""
+        q = self.tenant_quotas.get(tenant, self.tenant_quota)
+        return self.max_pending if q is None else min(int(q), self.max_pending)
 
     @property
     def inflight(self) -> int:
@@ -53,28 +90,84 @@ class AdmissionGate:
         with self._cond:
             return self._rejected
 
-    def acquire(self, timeout: float | None = None) -> None:
-        """Take one in-flight slot, blocking up to `timeout` (None = the
-        gate's default). Raises `ServerOverloaded` when no slot frees up."""
+    def pressure(self) -> float:
+        """Weighted in-flight load as a fraction of `max_pending` (the
+        server's overload-shed trigger, DESIGN.md §13)."""
+        with self._cond:
+            return self._inflight / self.max_pending
+
+    def tenant_stats(self) -> dict[str, dict[str, int]]:
+        """Per-tenant {inflight, quota, rejected} snapshot (operator API)."""
+        with self._cond:
+            tenants = set(self._tenants) | set(self._quota_rejected)
+            return {t: {"inflight": self._tenants.get(t, 0),
+                        "quota": self.quota_for(t),
+                        "rejected": self._quota_rejected.get(t, 0)}
+                    for t in sorted(tenants)}
+
+    def _fits(self, weight: int, tenant: str, quota: int) -> bool:
+        return (self._inflight + weight <= self.max_pending
+                and self._tenants.get(tenant, 0) + weight <= quota)
+
+    def acquire(self, weight: int = 1, tenant: str = "default",
+                timeout: float | None = None) -> None:
+        """Take `weight` in-flight slots for `tenant`, blocking up to
+        `timeout` (None = the gate's default). Raises `ServerOverloaded`
+        (global bound) or `TenantOverQuota` (tenant bound) when the slots
+        never free up. All-or-nothing: both bounds must fit at once."""
+        weight = max(1, int(weight))
+        quota = self.quota_for(tenant)
+        if weight > quota:
+            # oversized request: would never fit -- fail loud, don't hang
+            with self._cond:
+                self._quota_rejected[tenant] = (
+                    self._quota_rejected.get(tenant, 0) + 1)
+            raise TenantOverQuota(
+                f"request weight {weight} exceeds tenant {tenant!r} quota "
+                f"{quota} outright")
         timeout = self.timeout_s if timeout is None else float(timeout)
         deadline = self._clock() + timeout
+        if self.on_wait is not None and not self._fits(
+                weight, tenant, quota):
+            # unlocked peek: purely a wake hint for the shedding worker --
+            # a racy false positive or negative only costs one notify.
+            # Carries the blocked weight so the shedder can free exactly
+            # enough low-priority slots for this submitter to pass.
+            self.on_wait(weight)
         with self._cond:
-            while self._inflight >= self.max_pending:
+            while not self._fits(weight, tenant, quota):
                 remaining = deadline - self._clock()
                 if remaining <= 0 or not self._cond.wait(remaining):
+                    tenant_full = (self._tenants.get(tenant, 0) + weight
+                                   > quota)
                     self._rejected += 1
+                    if tenant_full:
+                        self._quota_rejected[tenant] = (
+                            self._quota_rejected.get(tenant, 0) + 1)
+                        raise TenantOverQuota(
+                            f"tenant {tenant!r} at quota "
+                            f"{self._tenants.get(tenant, 0)}/{quota} "
+                            f"for {timeout:.3f}s")
                     raise ServerOverloaded(
-                        f"{self._inflight} requests in flight >= max_pending="
-                        f"{self.max_pending} for {timeout:.3f}s")
-            self._inflight += 1
+                        f"{self._inflight} weighted slots in flight >= "
+                        f"max_pending={self.max_pending} for {timeout:.3f}s")
+            self._inflight += weight
+            self._tenants[tenant] = self._tenants.get(tenant, 0) + weight
 
-    def release(self, n: int = 1) -> None:
-        """Free `n` slots (their requests' futures were fulfilled)."""
+    def release(self, weight: int = 1, tenant: str = "default") -> None:
+        """Free `weight` slots of `tenant` (its request was fulfilled)."""
+        weight = max(1, int(weight))
         with self._cond:
-            self._inflight -= n
-            assert self._inflight >= 0, "admission gate over-released"
+            self._inflight -= weight
+            held = self._tenants.get(tenant, 0) - weight
+            assert self._inflight >= 0 and held >= 0, \
+                "admission gate over-released"
+            if held:
+                self._tenants[tenant] = held
+            else:
+                self._tenants.pop(tenant, None)
             self._cond.notify_all()
 
 
 __all__ = ["AdmissionGate", "ServerClosed", "ServerDegraded",
-           "ServerOverloaded"]
+           "ServerOverloaded", "TenantOverQuota"]

@@ -19,7 +19,10 @@ Two steady-state amortisations:
     `repro.filters.resolve_filter_plan` and pinned explicitly on every
     dispatch, so the hot path never re-consults the tuning cache
     (local exec only: sharded/streamed trace shard-/tile-local shapes and
-    must keep their own §9 cache keying);
+    must keep their own §9 cache keying). The memo is an LRU bounded at
+    `plan_memo_max` entries (DESIGN.md §13): long-tail shape traffic
+    recycles the coldest entry instead of growing memory without limit,
+    and `stats()` reports `plan_hits` / `plan_misses` / `plan_evicts`;
   * **power-of-two batch rounding** -- the coalesced batch zero-pads up to
     the next power of two, bounding compiles per bucket at
     log2(max_batch)+1 instead of one per distinct occupancy. The
@@ -51,12 +54,22 @@ Failure handling (DESIGN.md §12), innermost to outermost:
 
 The deterministic chaos harness (`repro.runtime.fault`) probes
 `SITE_EXECUTE` on every dispatch with the serve key, the exec mode
-actually used, and the batch's request sequence numbers -- the hooks the
-§12 tests and `scripts/check.sh --smoke-fault` drive.
+actually used, the executor's pool-member `name` (when set), and the
+batch's request sequence numbers -- the hooks the §12/§13 tests and
+`scripts/check.sh --smoke-fault` / `--smoke-slo` drive.
+
+Pool integration (DESIGN.md §13): `name` tags the executor's probe keys
+so chaos rules can target one pool member; `devices` additionally accepts
+an explicit device-id tuple (the elastic pool's device-subset meshes,
+`repro.distribute.mesh.filter_mesh`); and `on_dispatch(key, mode, ok)`
+reports every dispatch outcome to the owning `ExecutorPool`'s health
+tracker.
 """
 from __future__ import annotations
 
 import threading
+from collections import OrderedDict
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -79,18 +92,29 @@ class BatchExecutor:
     """Stateless-per-request executor with the per-bucket plan memo."""
 
     def __init__(self, *, interpret: bool | None = None,
-                 pad_pow2: bool = True, devices: int | None = None,
+                 pad_pow2: bool = True,
+                 devices: int | Sequence[int] | None = None,
                  tile: tuple[int, int] = (256, 256),
-                 tile_batch: int = 8, degrade_after: int = 2) -> None:
+                 tile_batch: int = 8, degrade_after: int = 2,
+                 plan_memo_max: int = 256, name: str = "",
+                 on_dispatch: Callable[[str, str, bool], None] | None = None
+                 ) -> None:
         self.interpret = interpret
         self.pad_pow2 = pad_pow2
-        self.devices = devices
+        self.devices = (tuple(devices) if isinstance(devices, (list, tuple))
+                        else devices)
         self.tile = tuple(tile)
         self.tile_batch = int(tile_batch)
         self.degrade_after = max(int(degrade_after), 1)
+        self.plan_memo_max = max(int(plan_memo_max), 1)
+        self.name = str(name)
+        self.on_dispatch = on_dispatch
         self._lock = threading.Lock()
-        self._plans: dict[tuple, dict] = {}
+        self._plans: OrderedDict[tuple, dict] = OrderedDict()
         self._plans_gen = cache_generation()
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.plan_evicts = 0
         self.warmed: set[str] = set()
         self.hits = 0
         self.misses = 0
@@ -112,23 +136,35 @@ class BatchExecutor:
         The memo follows the tuning cache's generation so an
         `invalidate_cache()` (an autotune store under a running server)
         drops stale pinned winners instead of serving them for the
-        server's lifetime."""
-        gen = cache_generation()
-        if gen != self._plans_gen:
-            self._plans.clear()
-            self._plans_gen = gen
+        server's lifetime, and is LRU-bounded at `plan_memo_max` entries
+        so long-tail shape traffic cannot grow it without limit
+        (DESIGN.md §13)."""
         memo_key = (filt, method, mult_impl, n, h, w)
-        plan = self._plans.get(memo_key)
-        if plan is None:
-            cfg = resolve_filter_plan(filt, n, h, w, method=method,
-                                      mult_impl=mult_impl)
-            plan = {"separable": cfg.dataflow != "direct",
-                    "fused": cfg.dataflow == "fused",
-                    "mult_impl": cfg.mult_impl,
-                    "block_rows": cfg.block_rows,
-                    "block_cols": cfg.block_cols,
-                    "batch_fold": cfg.batch_fold}
+        with self._lock:
+            gen = cache_generation()
+            if gen != self._plans_gen:
+                self._plans.clear()
+                self._plans_gen = gen
+            plan = self._plans.get(memo_key)
+            if plan is not None:
+                self.plan_hits += 1
+                self._plans.move_to_end(memo_key)
+                return plan
+            self.plan_misses += 1
+        cfg = resolve_filter_plan(filt, n, h, w, method=method,
+                                  mult_impl=mult_impl)
+        plan = {"separable": cfg.dataflow != "direct",
+                "fused": cfg.dataflow == "fused",
+                "mult_impl": cfg.mult_impl,
+                "block_rows": cfg.block_rows,
+                "block_cols": cfg.block_cols,
+                "batch_fold": cfg.batch_fold}
+        with self._lock:
             self._plans[memo_key] = plan
+            self._plans.move_to_end(memo_key)
+            while len(self._plans) > self.plan_memo_max:
+                self._plans.popitem(last=False)
+                self.plan_evicts += 1
         return plan
 
     def _exec_kw(self, exec_mode: str, filt: str, method: str,
@@ -165,7 +201,8 @@ class BatchExecutor:
                 self.misses += 1
                 self.warmed.add(skey)
         mode = r0.exec if exec_override is None else exec_override
-        fault_probe(SITE_EXECUTE, key=f"{skey}|exec={mode}",
+        tag = f"|member={self.name}" if self.name else ""
+        fault_probe(SITE_EXECUTE, key=f"{skey}|exec={mode}{tag}",
                     seqs=tuple(r.seq for r in requests))
         kw = self._exec_kw(mode, r0.filt, r0.method, r0.mult_impl,
                            traced_n, h, w)
@@ -174,20 +211,33 @@ class BatchExecutor:
             method=r0.method, nbits=r0.nbits,
             interpret=self.interpret, **kw)
 
+    def _report(self, key: str, mode: str, ok: bool) -> None:
+        """Tell the owning pool (if any) how one dispatch went -- the §13
+        health feed. Reporter faults must never corrupt fulfilment."""
+        if self.on_dispatch is not None:
+            try:
+                self.on_dispatch(key, mode, ok)
+            except Exception:                              # noqa: BLE001
+                pass
+
     def _dispatch(self, key: str, requests: tuple[FilterRequest, ...]
                   ) -> list[np.ndarray]:
         """`execute` under the per-bucket degraded-exec ladder (§12): a
         scale-out bucket that failed `degrade_after` consecutive dispatches
-        is pinned to the bit-identical local path."""
-        scale_out = requests[0].exec in SCALE_OUT_MODES
+        is pinned to the bit-identical local path. Every dispatch outcome
+        (with the exec mode actually used) feeds `on_dispatch` (§13)."""
+        mode = requests[0].exec
+        scale_out = mode in SCALE_OUT_MODES
         if scale_out and key in self._fallback:
             outs = self.execute(key, requests, exec_override="local")
+            self._report(key, "local", True)
             with self._lock:
                 self.degraded[key] = self.degraded.get(key, 0) + 1
             return outs
         try:
             outs = self.execute(key, requests)
         except BaseException:                              # noqa: BLE001
+            self._report(key, mode, False)
             if scale_out:
                 with self._lock:
                     nfail = self.failures.get(key, 0) + 1
@@ -196,10 +246,12 @@ class BatchExecutor:
                         self._fallback.add(key)
                 if key in self._fallback:
                     outs = self.execute(key, requests, exec_override="local")
+                    self._report(key, "local", True)
                     with self._lock:
                         self.degraded[key] = self.degraded.get(key, 0) + 1
                     return outs
             raise
+        self._report(key, mode, True)
         if scale_out:
             with self._lock:
                 self.failures[key] = 0
@@ -255,15 +307,33 @@ class BatchExecutor:
                     "degraded": dict(self.degraded),
                     "dispatch_failures": dict(self.failures)}
 
+    def stats(self) -> dict:
+        """Full executor snapshot: the warm compile ledger, the §13
+        LRU plan-memo counters, and the §12 fault counters."""
+        with self._lock:
+            snap = {"warmed": len(self.warmed), "hits": self.hits,
+                    "misses": self.misses,
+                    "plan_memo": {"size": len(self._plans),
+                                  "max": self.plan_memo_max,
+                                  "hits": self.plan_hits,
+                                  "misses": self.plan_misses,
+                                  "evicts": self.plan_evicts}}
+        snap.update(self.fault_stats())
+        return snap
+
     # ---------------------------------------------------------------- warmup
     def warm(self, shape: tuple[int, int], filt: str, *,
              method: str = "refmlm", mult_impl: str = "auto",
-             exec_mode: str = "local", nbits: int = 8, n: int = 1) -> str:
+             exec_mode: str = "local", nbits: int = 8, n: int = 1,
+             priority: str = "normal") -> str:
         """Pre-compile one (bucket, batch size) point with a zero dummy
-        batch; returns the serve_key it warmed."""
+        batch; returns the serve_key it warmed. `priority` only names the
+        warmed ledger bucket (classes never coalesce, §13) -- the compiled
+        executable underneath is priority-blind and shared."""
         h, w = shape
         traced_n = next_pow2(n) if self.pad_pow2 else n
-        key = bucket_key(filt, method, mult_impl, exec_mode, nbits, h, w)
+        key = bucket_key(filt, method, mult_impl, exec_mode, nbits, h, w,
+                         priority)
         kw = self._exec_kw(exec_mode, filt, method, mult_impl, traced_n, h, w)
         apply_filter_batch([np.zeros((h, w), np.int32)] * traced_n, filt,
                            method=method, nbits=nbits,

@@ -1,19 +1,39 @@
-"""Request/response vocabulary of the serving layer (DESIGN.md §10).
+"""Request/response vocabulary of the serving layer (DESIGN.md §10/§13).
 
 A `FilterRequest` is one client image plus its full datapath routing --
 the bank filter, multiplier method, tap-product implementation, pixel
-width and execution mode. The micro-batcher coalesces concurrent requests
-whose `bucket_key` agrees -- same (H, W) and same routing -- into one
-(N, H, W) batch riding the §8 batch fold, so the key names exactly the
-fields that must match for two requests to share one `apply_filter` call
-(and one compiled executable). Results come back through a `FilterFuture`.
+width and execution mode -- and, since §13, its *service level*: a
+priority class, a tenant, and an optional latency SLO. The micro-batcher
+coalesces concurrent requests whose `bucket_key` agrees -- same (H, W),
+same routing, same priority class -- into one (N, H, W) batch riding the
+§8 batch fold, so the key names exactly the fields that must match for
+two requests to share one `apply_filter` call (and one compiled
+executable). Results come back through a `FilterFuture`.
 
 `serve_key` extends a bucket key with the coalesced batch size: it is the
 warm-start compile-cache key, the serving analogue of
 `repro.tuning.config_key` (shape bucket × filter × mult_impl × exec, plus
 the padded N the executable actually traces with).
 
-A request may carry an absolute `deadline` (admission clock domain):
+Service-level fields (DESIGN.md §13):
+
+  * `priority`  -- one of `PRIORITIES` ('high' | 'normal' | 'low');
+                   buckets are homogeneous in priority, high-priority
+                   buckets flush first, and under overload low-priority
+                   queued work is shed before high-priority work degrades;
+  * `tenant`    -- the quota account the request's admission weight is
+                   charged to (per-tenant in-flight caps, admission.py);
+  * `slo`       -- absolute target-completion instant (admission clock
+                   domain, from the client's `slo_ms`): the adaptive
+                   batching controller (controller.py) picks the bucket's
+                   flush size and deadline so its predicted p99 fits the
+                   tightest queued SLO;
+  * `weight`    -- admission slots this request occupies
+                   (`request_weight`: ceil(pixels / WEIGHT_UNIT_PX), so a
+                   satellite-sized frame cannot hide behind the same
+                   single slot as a thumbnail).
+
+A request may also carry an absolute `deadline` (admission clock domain):
 requests still queued past it are *shed* at flush time with
 `DeadlineExceeded` instead of burning a dispatch (DESIGN.md §12).
 """
@@ -24,6 +44,21 @@ import threading
 
 import numpy as np
 
+#: priority classes, most-important first. Buckets never mix classes.
+PRIORITIES = ("high", "normal", "low")
+
+#: priority -> flush/shed rank (lower flushes first, sheds last).
+PRIORITY_RANK = {p: i for i, p in enumerate(PRIORITIES)}
+
+#: pixels per admission slot for the weighted accounting (DESIGN.md §13):
+#: one 128x128 request costs 1 slot, a 512x512 costs 16.
+WEIGHT_UNIT_PX = 128 * 128
+
+
+def request_weight(h: int, w: int) -> int:
+    """Weighted admission slots one (h, w) request occupies (>= 1)."""
+    return max(1, -(-int(h) * int(w) // WEIGHT_UNIT_PX))
+
 
 class DeadlineExceeded(RuntimeError):
     """The request's deadline expired while it was still queued; it was
@@ -31,9 +66,12 @@ class DeadlineExceeded(RuntimeError):
 
 
 def bucket_key(filt: str, method: str, mult_impl: str, exec_mode: str,
-               nbits: int, h: int, w: int) -> str:
-    """Coalescing key: requests sharing it may ride one micro-batch."""
-    return f"{filt}/{method}/{mult_impl}/{exec_mode}/b{nbits}/{h}x{w}"
+               nbits: int, h: int, w: int, priority: str = "normal") -> str:
+    """Coalescing key: requests sharing it may ride one micro-batch.
+    Priority is part of the key (DESIGN.md §13): classes never coalesce,
+    so shedding or deprioritising 'low' can never touch a 'high' batch."""
+    return (f"{filt}/{method}/{mult_impl}/{exec_mode}/b{nbits}/{h}x{w}"
+            f"/{priority}")
 
 
 def serve_key(bucket: str, n: int) -> str:
@@ -103,17 +141,27 @@ class FilterRequest:
     submitted: float             # admission clock() -- the flush deadline base
     seq: int                     # admission order (FIFO within a bucket)
     deadline: float | None = None   # absolute shed deadline (clock domain)
+    priority: str = "normal"     # member of PRIORITIES (DESIGN.md §13)
+    tenant: str = "default"      # quota account (admission.py)
+    slo: float | None = None     # absolute SLO instant (controller target)
+    weight: int = 1              # weighted admission slots (request_weight)
 
     @property
     def key(self) -> str:
         h, w = self.img.shape
         return bucket_key(self.filt, self.method, self.mult_impl, self.exec,
-                          self.nbits, h, w)
+                          self.nbits, h, w, self.priority)
+
+    @property
+    def rank(self) -> int:
+        """Flush/shed rank of the request's priority class (0 = high)."""
+        return PRIORITY_RANK[self.priority]
 
     def expired(self, now: float) -> bool:
         """True when the request carries a deadline that has passed."""
         return self.deadline is not None and now >= self.deadline
 
 
-__all__ = ["DeadlineExceeded", "FilterFuture", "FilterRequest", "bucket_key",
+__all__ = ["DeadlineExceeded", "FilterFuture", "FilterRequest", "PRIORITIES",
+           "PRIORITY_RANK", "WEIGHT_UNIT_PX", "bucket_key", "request_weight",
            "serve_key"]

@@ -1,44 +1,65 @@
 """`ImageFilterServer` -- the online serving loop (DESIGN.md §10) with the
-§12 fault-tolerance surface.
+§12 fault-tolerance surface and the §13 service-level machinery.
 
 One worker thread owns all device dispatch; client threads only validate,
 stack and wait. `submit()` admits a request through the backpressure gate
 (`repro.serve.admission`), drops it into the shape-bucketed micro-batcher
 (`repro.serve.batcher`) and returns a `FilterFuture`; the worker sleeps
 until the earliest bucket deadline (or a size trigger's notify), flushes
-every ready bucket through the `BatchExecutor`, and fulfils the futures.
+every ready bucket through the executor, and fulfils the futures.
 Admission slots are held until fulfilment, so `max_pending` bounds queued
-plus executing work.
+plus executing work -- in *weighted* slots since §13 (`request_weight`:
+a satellite frame charges its pixel count, not one thumbnail slot).
 
     with ImageFilterServer(ServerConfig(max_batch=8)) as srv:
         srv.warmup(shapes=[(128, 128)], filters=["gaussian5"])
         fut = srv.submit(img, "gaussian5", method="refmlm",
-                         deadline_ms=50.0)
+                         priority="high", tenant="cam-a", slo_ms=50.0)
         out = fut.result()          # bit-identical to apply_filter(img, ...)
 
-Failure handling (DESIGN.md §12): a request whose `deadline_ms` expires
-while still queued is *shed* at flush time (`DeadlineExceeded`, slot
-released, counted in `stats()['shed']`) instead of burning a dispatch;
-executor faults bisect so only genuinely poisoned requests fail; and a
-catch-all around every batch keeps the worker alive -- it fails that
-batch's unresolved futures, releases the slots, records the error, and
-flips the server to the explicit degraded state (`stats()['healthy']` /
-`['state']`) instead of silently hanging every pending future. With
-`fail_fast_degraded=True`, submissions to a degraded server raise
-`ServerDegraded` immediately rather than queueing.
+Service levels (DESIGN.md §13):
 
-`stats()` reports the per-request served/failed/shed counters, the batch
-occupancy histogram, flush-trigger counts, the warm compile-cache hit
-ledger, and the §12 fault counters (isolated / retries / degraded buckets
-/ worker errors) -- the observability surface the serve benchmark and the
-`--smoke-serve` / `--smoke-fault` guards read.
+  * **adaptive batching** (`adaptive=True`) -- the per-bucket flush size
+    and deadline come from `AdaptiveBatchController`'s warm plan-cost
+    ledger instead of the static pair: each bucket converges to the
+    largest pow-2 batch whose predicted tail latency fits the tightest
+    queued `slo_ms`. The worker times every dispatch and feeds the
+    controller's observed-service EWMA.
+  * **priorities and quotas** -- buckets are homogeneous in `priority`
+    and flush high-before-low; admission charges each request's weight
+    against its `tenant`'s quota (`tenant_quota` / `tenant_quotas`).
+  * **overload shedding** (`overload_shed=True`) -- when an admission is
+    about to block, the gate's `on_wait` hint wakes the worker, which
+    sheds queued low-priority work newest-first (`ServerOverloaded` on
+    the shed futures, cause counted in `stats()['shed_overload']`) until
+    the blocked submitter's weight fits. The highest priority class is
+    never overload-shed, so low-priority work drops before high-priority
+    work degrades.
+  * **elastic executor pool** (`pool=(...)`) -- dispatch goes through
+    `repro.serve.pool.ExecutorPool`: rendezvous-routed members over
+    explicit device-id subsets, health-tracked per dispatch; a member
+    failing `drain_after` consecutive scale-out dispatches is probed,
+    rebuilt on its surviving devices, or retired with its buckets
+    rebalanced (bit-identically) to the remaining members.
+
+Failure handling (DESIGN.md §12) is unchanged underneath: deadline-expired
+requests shed (`DeadlineExceeded`) instead of burning a dispatch, executor
+faults bisect so only genuinely poisoned requests fail, and a catch-all
+around every batch keeps the worker alive and flips the server to the
+explicit degraded state rather than hanging futures.
+
+`stats()` reports the per-request counters (now per-priority too), the
+batch occupancy histogram, flush-trigger counts, the warm compile-cache
+ledger, the §13 plan-memo/controller/tenant/pool surfaces, and the §12
+fault counters -- everything the serve benchmarks and the
+`--smoke-serve` / `--smoke-fault` / `--smoke-slo` guards read.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -49,24 +70,34 @@ from repro.serve.admission import (
     AdmissionGate,
     ServerClosed,
     ServerDegraded,
+    ServerOverloaded,
 )
 from repro.serve.batcher import MicroBatch, ShapeBucketedBatcher
-from repro.serve.executor import BatchExecutor
-from repro.serve.request import DeadlineExceeded, FilterFuture, FilterRequest
+from repro.serve.controller import AdaptiveBatchController
+from repro.serve.executor import BatchExecutor, next_pow2
+from repro.serve.pool import ExecutorPool
+from repro.serve.request import (
+    PRIORITIES,
+    DeadlineExceeded,
+    FilterFuture,
+    FilterRequest,
+    request_weight,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class ServerConfig:
-    """Serving policy knobs (flush triggers, backpressure, exec routing)."""
+    """Serving policy knobs (flush triggers, backpressure, exec routing,
+    §13 service levels)."""
 
     max_batch: int = 8              # size flush trigger / occupancy ceiling
     max_delay_ms: float = 2.0       # deadline flush trigger (oldest wait)
-    max_pending: int = 256          # admission gate: in-flight request bound
+    max_pending: int = 256          # admission gate: in-flight weight bound
     admission_timeout_s: float = 10.0
     pad_pow2: bool = True           # round traced batch up to a power of two
     exec: str = "local"             # default execution mode (DESIGN.md §9)
     interpret: bool | None = None   # backend autodetect, like apply_filter
-    devices: int | None = None      # sharded-exec mesh size (None = all)
+    devices: int | Sequence[int] | None = None  # sharded-exec mesh
     tile: tuple[int, int] = (256, 256)   # streamed-exec tile shape
     tile_batch: int = 8
     # ------------------------------- fault tolerance (DESIGN.md §12)
@@ -74,6 +105,17 @@ class ServerConfig:
     fail_fast_degraded: bool = False    # degraded server refuses admission
     degrade_after: int = 2          # consecutive scale-out dispatch failures
     #                                 before a bucket falls back to local
+    # ------------------------------- service levels (DESIGN.md §13)
+    adaptive: bool = False          # SLO-driven per-bucket flush policy
+    overload_shed: bool = False     # shed low-priority work for blocked
+    #                                 admissions (off = strict backpressure)
+    tenant_quota: int | None = None         # uniform per-tenant weight cap
+    tenant_quotas: dict[str, int] | None = None  # per-tenant overrides
+    plan_memo_max: int = 256        # LRU bound of the per-bucket plan memo
+    pool: tuple | None = None       # elastic pool: one device-id tuple (or
+    #                                 int count / None=all) per member
+    drain_after: int = 3            # member consecutive scale-out failures
+    #                                 before probe-and-rebuild
 
 
 class ImageFilterServer:
@@ -86,23 +128,41 @@ class ImageFilterServer:
             raise ValueError(f"exec must be one of {EXEC_MODES}, got "
                              f"{self.config.exec!r}")
         self._clock = clock
-        self._gate = AdmissionGate(self.config.max_pending,
-                                   self.config.admission_timeout_s, clock)
+        self._gate = AdmissionGate(
+            self.config.max_pending, self.config.admission_timeout_s, clock,
+            tenant_quota=self.config.tenant_quota,
+            tenant_quotas=self.config.tenant_quotas,
+            on_wait=self._on_gate_wait if self.config.overload_shed else None)
+        self._controller = (
+            AdaptiveBatchController(self.config.max_batch,
+                                    self.config.max_delay_ms / 1e3)
+            if self.config.adaptive else None)
         self._batcher = ShapeBucketedBatcher(
-            self.config.max_batch, self.config.max_delay_ms / 1e3, clock)
-        self._executor = BatchExecutor(
+            self.config.max_batch, self.config.max_delay_ms / 1e3, clock,
+            policy=self._controller.params if self._controller else None)
+        exec_kw = dict(
             interpret=self.config.interpret, pad_pow2=self.config.pad_pow2,
-            devices=self.config.devices, tile=self.config.tile,
-            tile_batch=self.config.tile_batch,
-            degrade_after=self.config.degrade_after)
+            tile=self.config.tile, tile_batch=self.config.tile_batch,
+            degrade_after=self.config.degrade_after,
+            plan_memo_max=self.config.plan_memo_max)
+        if self.config.pool is not None:
+            self._executor: BatchExecutor | ExecutorPool = ExecutorPool(
+                self.config.pool, drain_after=self.config.drain_after,
+                **exec_kw)
+        else:
+            self._executor = BatchExecutor(devices=self.config.devices,
+                                           **exec_kw)
         self._cond = threading.Condition()
         self._seq = 0
         self._closing = False
         self._drain = True
         self._healthy = True            # False once the worker catch-all fired
+        self._shed_need = 0             # weight blocked at the gate (§13)
         self._stats = {"submitted": 0, "served": 0, "failed": 0, "shed": 0,
-                       "fast_failed": 0, "errors": 0, "last_error": None,
-                       "batches": 0, "occupancy": {}, "flush_reasons": {}}
+                       "shed_overload": 0, "fast_failed": 0, "errors": 0,
+                       "last_error": None, "batches": 0, "occupancy": {},
+                       "flush_reasons": {},
+                       "served_priority": {p: 0 for p in PRIORITIES}}
         self._worker = threading.Thread(target=self._loop,
                                         name="repro-serve-worker", daemon=True)
         self._worker.start()
@@ -112,21 +172,27 @@ class ImageFilterServer:
                mult_impl: str = "auto", nbits: int = 8,
                exec: str | None = None,
                deadline_ms: float | None = None,
-               timeout: float | None = None) -> FilterFuture:
+               timeout: float | None = None,
+               priority: str = "normal", tenant: str = "default",
+               slo_ms: float | None = None) -> FilterFuture:
         """Admit one (H, W) grayscale image; returns its `FilterFuture`.
 
         Validation happens here, on the client thread, so a bad request
         fails fast instead of poisoning a coalesced batch: the filter name
         must exist, `exec` must be a §9 mode, `mult_impl` a known
-        tap-product implementation, and the image a single 2-D (or
-        (H, W, 1)) frame. Blocks while the server is at `max_pending`
-        in-flight requests (up to `timeout`, then `ServerOverloaded`).
+        tap-product implementation, `priority` a §13 class, and the image
+        a single 2-D (or (H, W, 1)) frame. Blocks while the server (or
+        `tenant`'s quota) is out of weighted in-flight slots (up to
+        `timeout`, then `ServerOverloaded` / `TenantOverQuota`).
 
         `deadline_ms` (default `config.default_deadline_ms`) is the §12
         shed deadline: if the request is still queued that long after
         admission, it is shed with `DeadlineExceeded` instead of being
-        dispatched. On a degraded server with `fail_fast_degraded`,
-        raises `ServerDegraded` without taking an admission slot.
+        dispatched. `slo_ms` is the §13 latency target the adaptive
+        controller sizes this bucket's flushes against (softer than a
+        deadline: it shapes batching, it never sheds). On a degraded
+        server with `fail_fast_degraded`, raises `ServerDegraded` without
+        taking an admission slot.
         """
         exec_mode = self.config.exec if exec is None else exec
         if exec_mode not in EXEC_MODES:
@@ -135,6 +201,9 @@ class ImageFilterServer:
         if mult_impl not in MULT_IMPLS:
             raise ValueError(f"mult_impl must be one of {MULT_IMPLS}, got "
                              f"{mult_impl!r}")
+        if priority not in PRIORITIES:
+            raise ValueError(f"priority must be one of {PRIORITIES}, got "
+                             f"{priority!r}")
         get_filter(filt)                     # unknown names fail fast
         arr = np.asarray(img)
         if arr.ndim == 3 and arr.shape[-1] == 1:
@@ -151,20 +220,23 @@ class ImageFilterServer:
                 "server is degraded; refusing admission (fail_fast_degraded)")
         if deadline_ms is None:
             deadline_ms = self.config.default_deadline_ms
-        self._gate.acquire(timeout)
+        weight = request_weight(*arr.shape)
+        self._gate.acquire(weight, tenant, timeout)
         future = FilterFuture()
         with self._cond:
             if self._closing:
-                self._gate.release()
+                self._gate.release(weight, tenant)
                 raise ServerClosed("server is closed")
             self._seq += 1
             now = self._clock()
             deadline = None if deadline_ms is None else now + deadline_ms / 1e3
+            slo = None if slo_ms is None else now + slo_ms / 1e3
             req = FilterRequest(img=arr, filt=filt, method=method,
                                 mult_impl=mult_impl, exec=exec_mode,
                                 nbits=int(nbits), future=future,
                                 submitted=now, seq=self._seq,
-                                deadline=deadline)
+                                deadline=deadline, priority=priority,
+                                tenant=tenant, slo=slo, weight=weight)
             self._batcher.add(req)
             self._stats["submitted"] += 1
             self._cond.notify_all()
@@ -172,29 +244,45 @@ class ImageFilterServer:
 
     def warmup(self, shapes, filters=("gaussian3",), *, methods=("refmlm",),
                mult_impls=("auto",), execs=None, batches=(1,),
-               nbits: int = 8) -> list[str]:
+               nbits: int = 8, priorities=("normal",)) -> list[str]:
         """Pre-compile the cross product of serve points; returns the warmed
         `serve_key`s (see `repro.serve.warmup` for the CLI)."""
         from repro.serve.warmup import sweep
         execs = (self.config.exec,) if execs is None else tuple(execs)
         return sweep(self._executor, shapes, filters, methods, mult_impls,
-                     execs, batches, nbits=nbits)
+                     execs, batches, nbits=nbits, priorities=priorities)
 
     def _is_healthy(self) -> bool:
         """Healthy = no worker catch-all error and no exec-mode fallback."""
         return self._healthy and not self._executor.degraded_mode
 
+    def _on_gate_wait(self, weight: int) -> None:
+        """The gate's §13 overload hint (called from a blocked submitter's
+        thread, no gate lock held): record the blocked weight and wake the
+        worker so it can shed low-priority queued work."""
+        with self._cond:
+            self._shed_need += max(1, int(weight))
+            self._cond.notify_all()
+
     def stats(self) -> dict:
         """Counters + occupancy histogram + warm-cache ledger + the §12
-        fault/health surface (a snapshot)."""
+        fault/health surface + the §13 service-level surface (a
+        snapshot)."""
         with self._cond:
             snap = {k: (dict(v) if isinstance(v, dict) else v)
                     for k, v in self._stats.items()}
         snap["pending"] = self._gate.inflight
+        snap["pressure"] = self._gate.pressure()
         snap["rejected"] = self._gate.rejected
-        snap["compile"] = {"warmed": len(self._executor.warmed),
-                           "hits": self._executor.hits,
-                           "misses": self._executor.misses}
+        snap["tenants"] = self._gate.tenant_stats()
+        ex = self._executor.stats()
+        snap["compile"] = {"warmed": ex["warmed"], "hits": ex["hits"],
+                           "misses": ex["misses"]}
+        snap["plan_memo"] = ex["plan_memo"]
+        if "pool" in ex:
+            snap["pool"] = ex["pool"]
+        if self._controller is not None:
+            snap["controller"] = self._controller.stats()
         snap.update(self._executor.fault_stats())
         snap["healthy"] = self._is_healthy()
         snap["state"] = "healthy" if snap["healthy"] else "degraded"
@@ -220,9 +308,18 @@ class ImageFilterServer:
         self.close(drain=True)
 
     # ---------------------------------------------------------- worker loop
+    def _shed_for_overload(self) -> None:
+        """Free queued low-priority weight for blocked admissions (§13).
+        Caller holds `self._cond`; the swept requests surface through
+        `take_shed()` with cause 'overload'."""
+        if self._shed_need > 0:
+            need, self._shed_need = self._shed_need, 0
+            self._batcher.shed_overload(need)
+
     def _loop(self) -> None:
         while True:
             with self._cond:
+                self._shed_for_overload()
                 batches = self._batcher.ready(self._clock())
                 shed = self._batcher.take_shed()
                 while not batches and not shed and not self._closing:
@@ -230,6 +327,7 @@ class ImageFilterServer:
                     wait = (None if deadline is None
                             else max(deadline - self._clock(), 1e-4))
                     self._cond.wait(wait)
+                    self._shed_for_overload()
                     batches = self._batcher.ready(self._clock())
                     shed = self._batcher.take_shed()
                 closing = self._closing
@@ -248,26 +346,42 @@ class ImageFilterServer:
                 return
 
     def _fail_shed(self, shed) -> None:
-        """Fail expired requests with DeadlineExceeded and free their
-        slots -- they never reach a dispatch (DESIGN.md §12)."""
+        """Fail swept requests and free their slots -- they never reach a
+        dispatch. Cause 'deadline' is the §12 expiry path
+        (`DeadlineExceeded`); cause 'overload' is the §13 load-shed path
+        (`ServerOverloaded` -- their slots go to higher-priority work)."""
         if not shed:
             return
-        for req in shed:
+        counts = {"deadline": 0, "overload": 0}
+        for item in shed:
+            req = item.request
             if not req.future.done():
-                req.future.set_exception(DeadlineExceeded(
-                    f"request seq={req.seq} shed: deadline expired before "
-                    f"dispatch (bucket {req.key})"))
+                if item.cause == "overload":
+                    req.future.set_exception(ServerOverloaded(
+                        f"request seq={req.seq} shed under overload "
+                        f"(priority {req.priority}, bucket {req.key})"))
+                else:
+                    req.future.set_exception(DeadlineExceeded(
+                        f"request seq={req.seq} shed: deadline expired "
+                        f"before dispatch (bucket {req.key})"))
+            counts[item.cause] = counts.get(item.cause, 0) + 1
+            self._gate.release(req.weight, req.tenant)
         with self._cond:
-            self._stats["shed"] += len(shed)
-        self._gate.release(len(shed))
+            self._stats["shed"] += counts["deadline"]
+            self._stats["shed_overload"] += counts["overload"]
+
+    def _release_batch(self, batch: MicroBatch) -> None:
+        for req in batch.requests:
+            self._gate.release(req.weight, req.tenant)
 
     def _fail_batch(self, batch: MicroBatch, err: BaseException) -> None:
         for req in batch.requests:
             if not req.future.done():
                 req.future.set_exception(err)
-        self._gate.release(len(batch.requests))
+        self._release_batch(batch)
 
     def _run(self, batch: MicroBatch) -> None:
+        t0 = self._clock()
         try:
             self._executor.run(batch)    # fulfils every future exactly once
         except BaseException as err:     # noqa: BLE001 -- §12 catch-all:
@@ -280,16 +394,26 @@ class ImageFilterServer:
                 self._healthy = False
                 self._stats["errors"] += 1
                 self._stats["last_error"] = repr(err)
-        served = sum(1 for r in batch.requests if not r.future.failed())
+        if self._controller is not None and batch.requests:
+            # feed the §13 observed-service ledger with the traced batch
+            # size this dispatch actually compiled for
+            n = len(batch.requests)
+            traced = next_pow2(n) if self.config.pad_pow2 else n
+            self._controller.observe(batch.key, batch.requests[0], traced,
+                                     self._clock() - t0)
+        served = [r for r in batch.requests if not r.future.failed()]
         with self._cond:
             self._stats["batches"] += 1
             occ = self._stats["occupancy"]
             occ[len(batch.requests)] = occ.get(len(batch.requests), 0) + 1
             fr = self._stats["flush_reasons"]
             fr[batch.reason] = fr.get(batch.reason, 0) + 1
-            self._stats["served"] += served
-            self._stats["failed"] += len(batch.requests) - served
-        self._gate.release(len(batch.requests))
+            self._stats["served"] += len(served)
+            self._stats["failed"] += len(batch.requests) - len(served)
+            sp = self._stats["served_priority"]
+            for r in served:
+                sp[r.priority] = sp.get(r.priority, 0) + 1
+        self._release_batch(batch)
 
 
 __all__ = ["ImageFilterServer", "ServerConfig"]

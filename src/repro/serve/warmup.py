@@ -36,18 +36,21 @@ def parse_shapes(text: str) -> list[tuple[int, int]]:
 
 
 def sweep(executor: BatchExecutor, shapes, filters, methods, mult_impls,
-          execs, batches, *, nbits: int = 8,
+          execs, batches, *, nbits: int = 8, priorities=("normal",),
           verbose: bool = False) -> list[str]:
     """Warm the cross product of serve points on `executor`; returns the
     warmed keys. The one sweep definition shared by this CLI and
-    `ImageFilterServer.warmup()`."""
+    `ImageFilterServer.warmup()`. `priorities` widens the warmed-ledger
+    cross product (§13 buckets are per-class); the compiled executables
+    are priority-blind, so extra classes cost bookkeeping, not compiles."""
     keys = []
-    for (h, w), filt, method, impl, em, n in itertools.product(
-            shapes, filters, methods, mult_impls, execs, batches):
+    for (h, w), filt, method, impl, em, n, pri in itertools.product(
+            shapes, filters, methods, mult_impls, execs, batches,
+            priorities):
         t0 = time.perf_counter()
         key = executor.warm((int(h), int(w)), filt, method=method,
                             mult_impl=impl, exec_mode=em, nbits=nbits,
-                            n=int(n))
+                            n=int(n), priority=pri)
         keys.append(key)
         if verbose:
             dt = (time.perf_counter() - t0) * 1e3

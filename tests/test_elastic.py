@@ -1,0 +1,169 @@
+"""Elastic re-meshing (`repro.runtime.elastic`, DESIGN.md §13): restore a
+checkpoint onto a *smaller* mesh after devices are lost, and the serving
+pool's device-probe discovery primitives.
+
+Anything needing more than one device runs in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the pattern of
+tests/test_distribution.py -- the main process must keep seeing 1 device).
+The probe primitives run in-process on the single CPU device, with the
+§12 deterministic injector modelling device loss.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.runtime.elastic import (  # noqa: E402
+    probe_device,
+    surviving_devices,
+)
+from repro.runtime.fault import (  # noqa: E402
+    SITE_SHARD,
+    FaultInjector,
+    fault_scope,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+# ------------------------------------------------------------ mesh shrink
+
+@pytest.mark.slow
+def test_remesh_restore_after_mesh_shrink(tmp_path):
+    """Checkpoint on 8 devices (2,4) -> half the pod dies -> restore on 4
+    devices (2,2) and keep training: the shrunk run's next step matches
+    the uninterrupted 8-device run."""
+    run_sub(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.checkpoint import save
+        from repro.configs import get_config
+        from repro.data.tokens import lm_batch
+        from repro.models.model import build_model
+        from repro.runtime import sharding as shd
+        from repro.runtime.elastic import remesh_restore, state_shardings
+        from repro.runtime.train_lib import make_train_state, make_train_step
+        cfg = get_config('qwen2-0.5b').reduced()
+        model = build_model(cfg)
+        step = make_train_step(model)
+        batch = lm_batch(cfg, batch=8, seq=32)
+        mesh_a = jax.make_mesh((2, 4), ('data', 'model'))
+        s0 = make_train_state(model, jax.random.PRNGKey(0))
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s0)
+        sh_a = state_shardings(abstract, cfg, mesh_a, multi_pod=False)
+        s0a = jax.tree.map(lambda x, s: jax.device_put(x, s), s0, sh_a)
+        with mesh_a, shd.activation_sharding_ctx(mesh_a, cfg,
+                                                 multi_pod=False):
+            s1a, _ = jax.jit(step, in_shardings=(sh_a, None),
+                             out_shardings=(sh_a, None))(s0a, batch)
+        save('{tmp_path}', 1, s1a, mesh_shape=(2, 4))
+        # "half the pod died": rebuild on the 4 surviving devices
+        survivors = jax.devices()[:4]
+        mesh_b = jax.sharding.Mesh(
+            np.asarray(survivors).reshape(2, 2), ('data', 'model'))
+        step_n, s1b = remesh_restore('{tmp_path}', abstract, cfg, mesh_b,
+                                     multi_pod=False)
+        assert step_n == 1
+        with mesh_b, shd.activation_sharding_ctx(mesh_b, cfg,
+                                                 multi_pod=False):
+            sh_b = state_shardings(abstract, cfg, mesh_b, multi_pod=False)
+            s2b, m2 = jax.jit(step, in_shardings=(sh_b, None),
+                              out_shardings=(sh_b, None))(
+                s1b, lm_batch(cfg, batch=8, seq=32, step=1))
+        # the uninterrupted 8-device run, for comparison
+        with mesh_a, shd.activation_sharding_ctx(mesh_a, cfg,
+                                                 multi_pod=False):
+            s2a, m1 = jax.jit(step, in_shardings=(sh_a, None),
+                              out_shardings=(sh_a, None))(
+                s1a, lm_batch(cfg, batch=8, seq=32, step=1))
+        np.testing.assert_allclose(float(m1['loss']), float(m2['loss']),
+                                   rtol=2e-5)
+        print('OK shrink restore')
+    """)
+
+
+# --------------------------------------------------------- device probing
+
+class TestProbeDevice:
+    def test_healthy_device_probes_true(self):
+        assert probe_device(0)
+
+    def test_unknown_id_probes_false(self):
+        assert not probe_device(99)
+
+    def test_injected_device_loss_probes_false(self):
+        inj = FaultInjector().on_key(SITE_SHARD, "dev0")
+        with fault_scope(inj):
+            assert not probe_device(0)
+        # the loss is scoped: the device is "back" outside the injector
+        assert probe_device(0)
+
+    def test_surviving_devices_filters_the_lost_id(self):
+        assert surviving_devices((0,)) == (0,)
+        inj = FaultInjector().on_key(SITE_SHARD, "dev0")
+        with fault_scope(inj):
+            assert surviving_devices((0,)) == ()
+
+    def test_survivors_across_a_real_mesh(self):
+        """8-device subprocess: kill ids 3 and 5, survivors name the rest,
+        and a sharded dispatch over the survivors still completes."""
+        run_sub("""
+            import numpy as np
+            from repro.distribute import apply_filter as dist_apply_filter
+            from repro.filters import apply_filter
+            from repro.runtime.elastic import surviving_devices
+            from repro.runtime.fault import (SITE_SHARD, FaultInjector,
+                                             fault_scope)
+            inj = (FaultInjector().on_key(SITE_SHARD, 'dev3')
+                                  .on_key(SITE_SHARD, 'dev5'))
+            with fault_scope(inj):
+                alive = surviving_devices(range(8))
+                assert alive == (0, 1, 2, 4, 6, 7), alive
+                img = np.arange(48 * 40, dtype=np.int32).reshape(48, 40) % 251
+                out = dist_apply_filter(img, 'gaussian3', exec='sharded',
+                                        devices=alive[:4])
+                np.testing.assert_array_equal(
+                    np.asarray(out), np.asarray(apply_filter(img,
+                                                             'gaussian3')))
+            print('OK survivors')
+        """)
+
+
+class TestExplicitDeviceMesh:
+    def test_filter_mesh_rejects_unknown_ids(self):
+        from repro.distribute.mesh import devices_by_id
+        with pytest.raises(ValueError, match="unknown device ids"):
+            devices_by_id([0, 41])
+
+    def test_explicit_subset_is_bit_identical(self):
+        """A mesh pinned to explicit ids serves the same bytes (8-device
+        subprocess; the §13 pool member's device-subset vocabulary)."""
+        run_sub("""
+            import numpy as np
+            from repro.distribute import apply_filter as dist_apply_filter
+            from repro.distribute.mesh import filter_mesh
+            from repro.filters import apply_filter
+            mesh = filter_mesh([2, 5, 6, 7], n=4)
+            assert sorted(d.id for d in mesh.devices.flat) == [2, 5, 6, 7]
+            imgs = (np.arange(4 * 48 * 40, dtype=np.int32)
+                    .reshape(4, 48, 40) % 241)
+            out = dist_apply_filter(imgs, 'sharpen3', exec='sharded',
+                                    devices=(2, 5, 6, 7))
+            np.testing.assert_array_equal(
+                np.asarray(out), np.asarray(apply_filter(imgs, 'sharpen3')))
+            print('OK explicit mesh')
+        """)
