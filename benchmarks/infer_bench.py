@@ -1,0 +1,134 @@
+"""Inference benchmark: the approximate-multiplier network datapath
+(DESIGN.md §14).
+
+``PYTHONPATH=src python -m benchmarks.infer_bench`` times the calibrated
+MLP head and CNN classifier across every multiplier method and emits one
+``infer_<model>_<method>`` row per point: µs per batched forward call,
+derived images/s and tokens/s (logit rows x num_classes per second), and
+the accuracy columns of the §14 error report (top-1 agreement vs the
+exact-quantized oracle and vs the float forward, logits PSNR) -- the
+Table-10-style artifact lifted from filters to networks. `benchmarks.run`
+folds the rows into BENCH_infer.json.
+
+``--smoke`` is the `scripts/check.sh --smoke-infer` guard:
+
+  * refmlm logits must be byte-equal to the exact-quantized oracle on
+    both models (the paper's zero-error theorem, end to end);
+  * mitchell_ecc2 top-1 agreement vs the oracle must clear the floor;
+  * inference served through `repro.serve` (coalesced, several flush
+    sizes) must return bytes equal to the direct forward call.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn, write_bench_json
+from repro.data.images import inference_batch
+from repro.infer import (InferWorkload, MODELS, calibrate, error_report,
+                         forward, init_params)
+
+HW = (8, 8)
+N_CAL = 4
+N_EVAL = 32
+METHODS = ("exact", "int8", "refmlm", "refmlm_kom3", "schoolbook_int16",
+           "karatsuba_int16", "mitchell", "mitchell_ecc2", "odma")
+#: --smoke top-1 agreement floor for mitchell_ecc2 (measured ~1.0 on the
+#: pinned seeds; generous margin so only a real accuracy regression trips).
+ECC_TOP1_FLOOR = 0.75
+
+
+def build_models(hw=HW, seed: int = 1):
+    models = {}
+    for name, build in MODELS.items():
+        g = build(hw)
+        models[name] = calibrate(g, init_params(g, seed=seed),
+                                 inference_batch(N_CAL, hw, seed=100))
+    return models
+
+
+def bench(n_eval: int = N_EVAL, methods=METHODS, tag: str = "infer_") -> dict:
+    models = build_models()
+    x = inference_batch(n_eval, HW, seed=0)
+    out: dict[str, dict] = {}
+    for name, cal in sorted(models.items()):
+        rep = error_report(cal, x, tuple(methods))
+        for method in methods:
+            us = time_fn(lambda m=method, c=cal: forward(c, x, m),
+                         iters=3, warmup=1)
+            images_s = n_eval / (us / 1e6)
+            tokens_s = images_s * cal.graph.num_classes
+            r = rep[method]
+            emit(f"{tag}{name}_{method}", us,
+                 images_s=round(images_s, 1), tokens_s=round(tokens_s, 1),
+                 top1_vs_oracle=round(r["top1_vs_oracle"], 3),
+                 top1_vs_float=round(r["top1_vs_float"], 3),
+                 psnr_db=round(r["psnr_db"], 1),
+                 max_ulp=max((layer["max_ulp"] for layer in r["layers"]),
+                             default=0))
+            out[f"{name}_{method}"] = {"us": us, "report": r}
+    return out
+
+
+# -------------------------------------------------------------------- smoke
+def _served_equals_direct(models, x) -> bool:
+    from repro.serve import ImageFilterServer, ServerConfig
+    ok = True
+    for max_batch in (1, 4):
+        cfg = ServerConfig(max_batch=max_batch, max_delay_ms=5.0,
+                           workloads={"infer": InferWorkload(models)})
+        with ImageFilterServer(cfg) as srv:
+            for model in sorted(models):
+                for method in ("refmlm", "mitchell_ecc2"):
+                    futs = [srv.submit(x[i], model, method=method,
+                                       workload="infer")
+                            for i in range(len(x))]
+                    served = np.stack([f.result(60) for f in futs])
+                    direct = np.asarray(forward(models[model], x, method))
+                    if not np.array_equal(served, direct):
+                        print(f"# FAIL: served {model}/{method} flush "
+                              f"{max_batch} != direct forward")
+                        ok = False
+    return ok
+
+
+def smoke() -> int:
+    """Reduced-size §14 inference guards (scripts/check.sh --smoke-infer)."""
+    rc = 0
+    models = build_models()
+    x = inference_batch(8, HW, seed=0)
+    for name, cal in sorted(models.items()):
+        oracle = np.asarray(forward(cal, x, "int8"))
+        refmlm = np.asarray(forward(cal, x, "refmlm"))
+        if np.array_equal(oracle, refmlm):
+            print(f"# smoke-infer: {name} refmlm == int8 oracle "
+                  "(bit-identical logits)")
+        else:
+            print(f"# FAIL: {name} refmlm forward differs from the "
+                  "exact-quantized oracle")
+            rc = 1
+        rep = error_report(cal, x, ("mitchell_ecc2",))
+        top1 = rep["mitchell_ecc2"]["top1_vs_oracle"]
+        print(f"# smoke-infer: {name} mitchell_ecc2 top-1 agreement "
+              f"{top1:.3f} (floor {ECC_TOP1_FLOOR})")
+        if top1 < ECC_TOP1_FLOOR:
+            print(f"# FAIL: {name} mitchell_ecc2 agreement below the floor")
+            rc = 1
+    if _served_equals_direct(models, x):
+        print("# smoke-infer: served inference == direct forward "
+              "(byte-equal, flush sizes 1 and 4)")
+    else:
+        rc = 1
+    return rc
+
+
+def main() -> None:
+    bench()
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        sys.exit(smoke())
+    main()
+    write_bench_json("BENCH_infer.json", prefix="infer_")

@@ -3,9 +3,10 @@ serving bench.
 
 ``PYTHONPATH=src python -m benchmarks.run``   prints name,us_per_call,derived
 CSV for every row, writes the machine-readable perf artifacts --
-BENCH_kernels.json (kernel_* rows) and BENCH_serve.json (serve_* rows,
-the DESIGN.md §10 serving SLO schema; see benchmarks/common.py) -- and
-exits nonzero if any table's invariant fails.
+BENCH_kernels.json (kernel_* rows), BENCH_serve.json (serve_* rows, the
+DESIGN.md §10 serving SLO schema) and BENCH_infer.json (infer_* rows, the
+DESIGN.md §14 per-method accuracy/throughput schema; see
+benchmarks/common.py) -- and exits nonzero if any table's invariant fails.
 """
 from __future__ import annotations
 
@@ -17,11 +18,12 @@ from benchmarks.common import write_bench_json
 
 
 def main() -> None:
-    from benchmarks import (kernel_bench, serve_bench, table1_2x2,
-                            table6_error, table7_4x4, table8_dist,
-                            table9_scaling, table10_psnr)
+    from benchmarks import (infer_bench, kernel_bench, serve_bench,
+                            table1_2x2, table6_error, table7_4x4,
+                            table8_dist, table9_scaling, table10_psnr)
     mods = [table1_2x2, table6_error, table7_4x4, table8_dist,
-            table9_scaling, table10_psnr, kernel_bench, serve_bench]
+            table9_scaling, table10_psnr, kernel_bench, serve_bench,
+            infer_bench]
     print("name,us_per_call,derived")
     failures = []
     for mod in mods:
@@ -35,11 +37,12 @@ def main() -> None:
     if failures:
         # Don't refresh the perf artifact from a broken run -- a partial row
         # set would silently truncate the README table downstream.
-        print(f"# FAILED: {failures} (BENCH_kernels.json/BENCH_serve.json "
-              "not written)")
+        print(f"# FAILED: {failures} (BENCH_kernels.json/BENCH_serve.json/"
+              "BENCH_infer.json not written)")
         sys.exit(1)
     write_bench_json()
     write_bench_json("BENCH_serve.json", prefix="serve_")
+    write_bench_json("BENCH_infer.json", prefix="infer_")
     print("# all benchmark tables passed")
 
 

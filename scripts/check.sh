@@ -7,6 +7,7 @@
 #   scripts/check.sh --smoke-tune   plan-tuning guard only (DESIGN.md §11)
 #   scripts/check.sh --smoke-fault  fault-tolerance guard only (DESIGN.md §12)
 #   scripts/check.sh --smoke-slo    service-level guard only (DESIGN.md §13)
+#   scripts/check.sh --smoke-infer  inference datapath guard only (DESIGN.md §14)
 #
 # The perf smoke runs benchmarks/kernel_bench.py --smoke on a reduced size
 # and fails if (a) the KCM constant-coefficient path is slower than the
@@ -50,6 +51,14 @@
 # the direct apply_filter call byte for byte, and a pool member whose
 # scale-out mesh is killed must drain to the survivor with zero
 # client-visible failures.
+#
+# The inference smoke (--smoke-infer, benchmarks/infer_bench.py --smoke) is
+# the DESIGN.md §14 guard: refmlm logits must be byte-equal to the
+# exact-quantized int8 oracle on both the MLP head and the CNN classifier
+# (the paper's zero-error theorem carried end to end through a network),
+# mitchell_ecc2 top-1 agreement vs the oracle must clear the floor, and
+# inference served through repro.serve at several flush sizes must return
+# bytes equal to the direct forward call.
 #
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
@@ -104,6 +113,11 @@ if [[ "${1:-}" == "--smoke-slo" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--smoke-infer" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.infer_bench --smoke
+  exit 0
+fi
+
 lint
 if [[ "${1:-}" == "--lint" ]]; then
   exit 0
@@ -127,3 +141,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smo
 
 echo "== service-level smoke (serve_bench --smoke-slo) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke-slo
+
+echo "== inference smoke (infer_bench --smoke) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.infer_bench --smoke

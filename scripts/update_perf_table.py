@@ -1,8 +1,8 @@
 #!/usr/bin/env python
 """Regenerate the README "Performance" table from BENCH_kernels.json +
-BENCH_serve.json.
+BENCH_serve.json + BENCH_infer.json.
 
-    PYTHONPATH=src python -m benchmarks.run        # writes both artifacts
+    PYTHONPATH=src python -m benchmarks.run        # writes the artifacts
     python scripts/update_perf_table.py            # splices the README table
 
 The table is the curated DESIGN.md §7/§8 before/after story (recursion vs
@@ -56,6 +56,13 @@ ROWS = [
      "overloaded serving, mixed priorities, static flush policy (µs = mean post-admission latency)"),
     ("serve_slo_adaptive",
      "overloaded serving, mixed priorities, **SLO-adaptive batching + priority shedding** (§13)"),
+    ("infer_cnn_int8",
+     "CNN inference (8×8, n=32), **exact-quantized int8 oracle** (§14; µs = batched forward)"),
+    ("infer_cnn_refmlm",
+     "CNN inference, **refmlm** -- bit-identical logits to the oracle (§14)"),
+    ("infer_cnn_mitchell", "CNN inference, mitchell (approximate LNS)"),
+    ("infer_cnn_mitchell_ecc2",
+     "CNN inference, mitchell_ecc2 (Babic 2-bit error correction)"),
 ]
 SPEEDUPS = [
     ("kernel_bank_gaussian5_kcm_speedup", "KCM vs recursion"),
@@ -99,11 +106,12 @@ def build_table(bench: dict) -> str:
 def main() -> int:
     readme_path = ROOT / "README.md"
     bench = {}
-    for fname in ("BENCH_kernels.json", "BENCH_serve.json"):
+    for fname in ("BENCH_kernels.json", "BENCH_serve.json",
+                  "BENCH_infer.json"):
         path = ROOT / fname
         if not path.exists():
             print(f"{fname} missing -- run `python -m benchmarks.run` "
-                  "first (it writes both artifacts)", file=sys.stderr)
+                  "first (it writes every artifact)", file=sys.stderr)
             return 1
         bench.update(json.loads(path.read_text()))
     readme = readme_path.read_text()

@@ -15,9 +15,20 @@ Methods
                       multiplier (oracle for the quantized path: identical
                       result to 'exact quantized' by the paper's theorem).
 
-The LNS methods are reference-semantics implementations (element products
-then reduce); the Pallas kernels in repro/kernels tile the same math for
-TPU VMEM. Large-model layers call this API with method from the config's
+Implementations (`impl=`, DESIGN.md §14):
+
+  reference -- pure-jnp semantics (element products then reduce), the
+               bit-level oracle. The default.
+  pallas    -- the tiled VMEM kernels in repro/kernels (mitchell_matmul
+               for the LNS family, karatsuba_matmul for the limb family),
+               asserted bit-identical to the reference in
+               tests/test_matmul_impl.py. Methods without a kernel
+               (exact / int8 / odma / refmlm) keep reference semantics.
+  auto      -- pallas on a compiled TPU backend, reference on the CPU
+               interpret backend (kernel dispatch overhead dominates
+               there; the two are bit-identical anyway).
+
+Large-model layers call this API with method from the config's
 `matmul_method` so the technique is a first-class framework feature.
 """
 from __future__ import annotations
@@ -33,6 +44,7 @@ from jax import Array
 from repro.core.mitchell import babic_ecc as _babic_ecc
 from repro.core.mitchell import mitchell as _mitchell
 from repro.core.odma import odma as _odma
+from repro.core.platform import default_interpret
 from repro.core.quant import quantize_limbs, quantize_magnitude
 from repro.core.refmlm import refmlm as _refmlm
 
@@ -50,8 +62,20 @@ METHODS = (
     "refmlm_kom3",
 )
 
+#: matmul implementation backends (module docstring; DESIGN.md §14).
+IMPLS = ("reference", "pallas", "auto")
 
-def _scalar_multiplier(method: str, nbits: int) -> Callable[[Array, Array], Array]:
+#: methods with a Pallas kernel: LNS family -> mitchell_matmul, limb
+#: family -> karatsuba_matmul. Everything else is reference-only.
+PALLAS_LNS_METHODS = ("mitchell", "mitchell_ecc1", "mitchell_ecc2",
+                      "mitchell_ecc3")
+PALLAS_LIMB_METHODS = ("schoolbook_int16", "karatsuba_int16")
+
+
+def scalar_multiplier(method: str, nbits: int) -> Callable[[Array, Array], Array]:
+    """The method's elementwise integer product on non-negative operands
+    (< 2**nbits) -- the unit the matmuls and the `repro.infer` quantized
+    forward (DESIGN.md §14) both reduce over."""
     if method == "mitchell":
         return partial(_mitchell, nbits=nbits)
     if m := re.fullmatch(r"mitchell_ecc(\d+)", method):
@@ -65,9 +89,13 @@ def _scalar_multiplier(method: str, nbits: int) -> Callable[[Array, Array], Arra
     raise ValueError(f"unknown LNS method {method!r}")
 
 
+#: backwards-compatible private alias (pre-§14 name).
+_scalar_multiplier = scalar_multiplier
+
+
 def _lns_matmul(a: Array, b: Array, method: str, nbits: int, row_chunk: int) -> Array:
     """Sign-magnitude LNS matmul: out[m,n] = sum_k mult(|a|,|b|) * sign."""
-    mult = _scalar_multiplier(method, nbits)
+    mult = scalar_multiplier(method, nbits)
     qa = quantize_magnitude(a, nbits)
     qb = quantize_magnitude(b, nbits)
     sa = qa.magnitude * qa.sign            # signed magnitudes, int32
@@ -112,6 +140,84 @@ def _limb_matmul(a: Array, b: Array, karatsuba: bool) -> Array:
     return acc * (sa * sb)
 
 
+def _pad_to_multiple(x: Array, m0: int, m1: int) -> Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    return jnp.pad(x, ((0, p0), (0, p1))) if (p0 or p1) else x
+
+
+def _pallas_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """Block shapes that divide the padded operands: the kernel defaults
+    capped at the next power of two of each axis, so tiny research shapes
+    don't pad out to a full 16x128x128 tile."""
+    pow2 = lambda v: 1 << max(0, int(v) - 1).bit_length()  # noqa: E731
+    return min(16, pow2(m)), min(128, pow2(n)), min(128, pow2(k))
+
+
+def _pallas_lns_matmul(a: Array, b: Array, method: str, nbits: int,
+                       interpret: bool | None) -> Array:
+    """LNS matmul on the Mitchell-family Pallas kernel -- bit-identical to
+    `_lns_matmul` while the int32 sums stay exactly representable in f32
+    (products < 2**(2*nbits), so K <= 2**(24 - 2*nbits) at full
+    magnitude; ample for the research shapes)."""
+    from repro.kernels.mitchell_matmul import mitchell_matmul_kernel
+    if method == "mitchell":
+        num_ecc, case_split = 0, True
+    else:
+        num_ecc = int(re.fullmatch(r"mitchell_ecc(\d+)", method).group(1))
+        case_split = False
+    qa = quantize_magnitude(a, nbits)
+    qb = quantize_magnitude(b, nbits)
+    sa = (qa.magnitude * qa.sign).reshape(-1, a.shape[-1])
+    sb = qb.magnitude * qb.sign
+    bm, bn, bk = _pallas_blocks(sa.shape[0], sb.shape[1], sa.shape[1])
+    acc = mitchell_matmul_kernel(
+        _pad_to_multiple(sa, bm, bk), _pad_to_multiple(sb, bk, bn),
+        num_ecc=num_ecc, case_split=case_split,
+        block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+    )[: sa.shape[0], : sb.shape[1]]
+    out = acc.astype(jnp.float32) * (qa.scale * qb.scale)
+    return out.reshape(*a.shape[:-1], b.shape[-1])
+
+
+def _pallas_limb_matmul(a: Array, b: Array, karatsuba: bool,
+                        interpret: bool | None) -> Array:
+    """Limb matmul on the Karatsuba Pallas kernel -- same reconstruction
+    arithmetic as `_limb_matmul`, bit-identical partial sums."""
+    from repro.kernels.karatsuba_matmul import karatsuba_matmul_kernel
+    da, sa = quantize_limbs(a.reshape(-1, a.shape[-1]), karatsuba=karatsuba)
+    db, sb = quantize_limbs(b, karatsuba=karatsuba)
+    w = da.limb_bits
+    m, k = da.hi.shape
+    n = db.hi.shape[1]
+    bm, bn, bk = _pallas_blocks(m, n, k)
+    bm = max(bm, 8)                      # kernel tiles want a few rows
+    hh, mid, ll = karatsuba_matmul_kernel(
+        _pad_to_multiple(da.hi, bm, bk), _pad_to_multiple(da.lo, bm, bk),
+        _pad_to_multiple(db.hi, bk, bn), _pad_to_multiple(db.lo, bk, bn),
+        karatsuba=karatsuba, block_m=bm, block_n=bn, block_k=bk,
+        interpret=interpret,
+    )
+    acc = (hh[:m, :n].astype(jnp.float32) * float(1 << (2 * w))
+           + mid[:m, :n].astype(jnp.float32) * float(1 << w)
+           + ll[:m, :n].astype(jnp.float32))
+    return (acc * (sa * sb)).reshape(*a.shape[:-1], b.shape[-1])
+
+
+def _resolve_impl(impl: str, method: str) -> str:
+    """Apply the `impl` vocabulary: 'auto' picks pallas only on a compiled
+    TPU backend; methods without a kernel always take the (bit-identical)
+    reference path."""
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "auto":
+        impl = "reference" if default_interpret() else "pallas"
+    if impl == "pallas" and method not in (*PALLAS_LNS_METHODS,
+                                           *PALLAS_LIMB_METHODS):
+        return "reference"
+    return impl
+
+
 def _int8_matmul(a: Array, b: Array) -> Array:
     qa = quantize_magnitude(a, 7)          # int8 symmetric: magnitudes < 128
     qb = quantize_magnitude(b, 7)
@@ -128,16 +234,30 @@ def matmul(
     nbits: int = 8,
     row_chunk: int = 64,
     precision=None,
+    impl: str = "reference",
+    interpret: bool | None = None,
 ) -> Array:
-    """Unified (..., M, K) x (K, N) matmul over the multiplier family."""
+    """Unified (..., M, K) x (K, N) matmul over the multiplier family.
+
+    `impl` selects the backend ('reference' | 'pallas' | 'auto', module
+    docstring); `interpret` is forwarded to the Pallas kernels
+    (None = backend autodetect, DESIGN.md §7) and ignored by the
+    reference path.
+    """
     if method == "exact":
         return jnp.matmul(a, b, precision=precision)
     if method == "int8":
         return _int8_matmul(a, b)
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; valid: {METHODS}")
+    resolved = _resolve_impl(impl, method)
+    if resolved == "pallas":
+        if method in PALLAS_LIMB_METHODS:
+            return _pallas_limb_matmul(a, b, method == "karatsuba_int16",
+                                       interpret)
+        return _pallas_lns_matmul(a, b, method, nbits, interpret)
     if method == "schoolbook_int16":
         return _limb_matmul(a, b, karatsuba=False)
     if method == "karatsuba_int16":
         return _limb_matmul(a, b, karatsuba=True)
-    if method in METHODS:
-        return _lns_matmul(a, b, method, nbits, row_chunk)
-    raise ValueError(f"unknown method {method!r}; valid: {METHODS}")
+    return _lns_matmul(a, b, method, nbits, row_chunk)

@@ -69,6 +69,14 @@ def _balanced_limbs(q: Array, w: int) -> tuple[Array, Array]:
     return hi, lo
 
 
+def balanced_limbs(q: Array, w: int) -> tuple[Array, Array]:
+    """Public alias of the balanced-limb split for pre-quantized integers.
+
+    Used by `repro.infer` to decompose already-quantized int32 activations
+    without re-deriving a scale (DESIGN.md §14)."""
+    return _balanced_limbs(q, w)
+
+
 def quantize_limbs(x: Array, *, karatsuba: bool, axis: int | None = None) -> tuple[LimbDecomposition, Array]:
     """Quantize a float tensor into balanced int8 limbs + scale.
 

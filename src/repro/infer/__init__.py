@@ -1,0 +1,18 @@
+"""repro.infer -- quantized inference on the approximate-multiplier stack
+(DESIGN.md §14): layer graphs, static-scale calibration, the per-layer
+routed forward runner, the Table-10-style error report, and the serving
+workload adapter."""
+from repro.infer.calibrate import (CalibratedModel, calibrate, export_scales,
+                                   float_forward, with_scales)
+from repro.infer.graph import (MODELS, Conv, Dense, Flatten, LayerGraph,
+                               cnn_classifier, init_params, mlp_head)
+from repro.infer.report import error_report, format_report
+from repro.infer.runner import INFER_METHODS, forward
+from repro.infer.serving import InferWorkload
+
+__all__ = [
+    "CalibratedModel", "calibrate", "export_scales", "float_forward",
+    "with_scales", "MODELS", "Conv", "Dense", "Flatten", "LayerGraph",
+    "cnn_classifier", "init_params", "mlp_head", "error_report",
+    "format_report", "INFER_METHODS", "forward", "InferWorkload",
+]

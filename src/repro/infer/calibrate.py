@@ -1,0 +1,163 @@
+"""Static-scale calibration for the quantized inference path (DESIGN.md §14).
+
+Post-training symmetric quantization, one scale pair per multiplying layer:
+
+  * weights:     s_w = max|W| / qmax, qW = round(W / s_w)         (offline)
+  * activations: s_a = max|a| over a calibration batch / qmax     (offline)
+  * bias:        qb  = round(b / (s_a * s_w))  -- accumulator LSBs
+
+Scales are *static*: frozen after `calibrate()` (or imported via
+`with_scales()`), never recomputed from live data. That staticness is what
+makes served batched inference byte-equal to the direct call -- zero-pad
+rows added by the batcher cannot perturb any scale, so every real row sees
+exactly the arithmetic of the direct forward pass.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.infer.graph import Conv, Dense, Flatten, LayerGraph
+
+
+class LayerQuant(NamedTuple):
+    """Frozen quantization of one multiplying layer."""
+    qweight: Array         # int32, (K, c_out): Dense (d_in,d_out) or im2col conv
+    qbias: Array           # int32, accumulator-domain bias
+    w_scale: float
+    a_scale: float
+
+
+class CalibratedModel(NamedTuple):
+    graph: LayerGraph
+    params: list           # float params (kept for the exact-float path)
+    lq: tuple              # per-layer LayerQuant | None (non-multiplying)
+    nbits: int
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.nbits) - 1
+
+
+def _im2col(a: Array, ksize: int) -> Array:
+    """(B,H,W,C) -> (B,H,W,ksize*ksize*C), zero 'same' halo. Index order
+    (ki, kj, c) matches `w.reshape(k*k*c_in, c_out)`. Zero pads commute with
+    symmetric quantization (round(0/s) == 0), so the quantized conv sees
+    exactly the quantized-zero halo."""
+    pad = ksize // 2
+    b, h, w, _ = a.shape
+    ap = jnp.pad(a, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = [ap[:, i:i + h, j:j + w, :]
+            for i in range(ksize) for j in range(ksize)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _maxpool(a: Array, stride: int) -> Array:
+    b, h, w, c = a.shape
+    return a.reshape(b, h // stride, stride, w // stride, stride, c).max(axis=(2, 4))
+
+
+def _weight_matrix(layer, p) -> tuple[np.ndarray, np.ndarray]:
+    w, b = p["w"], p["b"]
+    if isinstance(layer, Conv):
+        w = w.reshape(layer.ksize * layer.ksize * layer.c_in, layer.c_out)
+    return w, b
+
+
+def float_forward(graph: LayerGraph, params: list, x: Array) -> Array:
+    """Reference float32 forward (the 'exact' method and calibration driver).
+    x: (B, H, W) in [0, 1] -> logits (B, num_classes)."""
+    a = jnp.asarray(x, jnp.float32)[..., None]            # (B,H,W,1)
+    for layer, p in zip(graph.layers, params):
+        if isinstance(layer, Flatten):
+            a = a.reshape(a.shape[0], -1)
+        elif isinstance(layer, Dense):
+            a = a @ p["w"] + p["b"]
+            if layer.relu:
+                a = jnp.maximum(a, 0.0)
+        elif isinstance(layer, Conv):
+            w, b = _weight_matrix(layer, p)
+            a = _im2col(a, layer.ksize) @ w + b
+            if layer.relu:
+                a = jnp.maximum(a, 0.0)
+            if layer.pool > 1:
+                a = _maxpool(a, layer.pool)
+        else:
+            raise TypeError(f"unknown layer {layer!r}")
+    return a
+
+
+def calibrate(graph: LayerGraph, params: list, x_cal: np.ndarray,
+              nbits: int = 8) -> CalibratedModel:
+    """One float pass over a calibration batch, recording each multiplying
+    layer's input abs-max; freezes weight + activation scales (module
+    docstring). Raises on non-finite statistics -- a NaN/Inf amax would
+    silently zero every quantized activation downstream."""
+    qmax = (1 << nbits) - 1
+    a = jnp.asarray(x_cal, jnp.float32)[..., None]
+    scales: list[float | None] = []
+    for layer, p in zip(graph.layers, params):
+        if isinstance(layer, Flatten):
+            a = a.reshape(a.shape[0], -1)
+            scales.append(None)
+            continue
+        amax = float(jnp.max(jnp.abs(a)))
+        if not math.isfinite(amax):
+            raise ValueError(
+                f"calibration overflow at layer {layer!r}: non-finite "
+                f"activation abs-max {amax!r}")
+        scales.append(max(amax, 1e-30) / qmax)
+        if isinstance(layer, Dense):
+            a = a @ p["w"] + p["b"]
+        else:
+            w, b = _weight_matrix(layer, p)
+            a = _im2col(a, layer.ksize) @ w + b
+        if layer.relu:
+            a = jnp.maximum(a, 0.0)
+        if isinstance(layer, Conv) and layer.pool > 1:
+            a = _maxpool(a, layer.pool)
+    return _freeze(graph, params, scales, nbits)
+
+
+def _freeze(graph: LayerGraph, params: list, a_scales: list,
+            nbits: int) -> CalibratedModel:
+    qmax = (1 << nbits) - 1
+    lq: list[LayerQuant | None] = []
+    for layer, p, s_a in zip(graph.layers, params, a_scales):
+        if not isinstance(layer, (Dense, Conv)):
+            lq.append(None)
+            continue
+        w, b = _weight_matrix(layer, p)
+        wmax = float(np.max(np.abs(w)))
+        if not math.isfinite(wmax):
+            raise ValueError(f"non-finite weights at layer {layer!r}")
+        s_w = max(wmax, 1e-30) / qmax
+        qw = jnp.clip(jnp.round(jnp.asarray(w) / s_w), -qmax, qmax)
+        qb = jnp.round(jnp.asarray(b) / (s_a * s_w))
+        lq.append(LayerQuant(qw.astype(jnp.int32), qb.astype(jnp.int32),
+                             s_w, float(s_a)))
+    return CalibratedModel(graph, params, tuple(lq), nbits)
+
+
+def export_scales(cal: CalibratedModel) -> dict:
+    """JSON-able static-scale bundle (deploy-time artifact)."""
+    return {
+        "nbits": cal.nbits,
+        "layers": [None if q is None
+                   else {"a_scale": q.a_scale, "w_scale": q.w_scale}
+                   for q in cal.lq],
+    }
+
+
+def with_scales(graph: LayerGraph, params: list, scales: dict) -> CalibratedModel:
+    """Rebuild a CalibratedModel from `export_scales()` output -- the static
+    scale import path (no calibration data needed at load time)."""
+    if len(scales["layers"]) != len(graph.layers):
+        raise ValueError("scale bundle does not match graph arity")
+    a_scales = [None if s is None else float(s["a_scale"])
+                for s in scales["layers"]]
+    return _freeze(graph, params, a_scales, int(scales["nbits"]))

@@ -1,0 +1,68 @@
+"""Error-propagation report for the routed inference path (DESIGN.md §14).
+
+Per multiplier method, versus the exact-quantized int8 oracle:
+
+  * per-layer max/mean ulp drift -- absolute difference of the int32
+    accumulators, in accumulator LSBs (the quantized network's 'ulp'),
+  * top-1 agreement (vs the oracle and vs the float-exact forward),
+  * logits PSNR (paper eq. 30/31, peak = oracle logit magnitude),
+
+formatted as the paper's Table-10-style artifact lifted from filters to
+networks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.images import psnr
+from repro.infer.calibrate import CalibratedModel
+from repro.infer.runner import forward
+
+
+def error_report(cal: CalibratedModel, x: np.ndarray,
+                 methods: tuple[str, ...], oracle: str = "int8") -> dict:
+    """Run every method over x and score it against the oracle forward."""
+    o_logits, o_accs = forward(cal, x, oracle, collect=True)
+    o_logits = np.asarray(o_logits)
+    o_top1 = o_logits.argmax(axis=-1)
+    f_top1 = np.asarray(forward(cal, x, "exact")).argmax(axis=-1)
+    peak = float(np.max(np.abs(o_logits))) or 1.0
+    out = {}
+    for method in methods:
+        if method == "exact":
+            logits = np.asarray(forward(cal, x, "exact"))
+            layers = []
+        else:
+            logits, accs = forward(cal, x, method, collect=True)
+            logits = np.asarray(logits)
+            layers = []
+            for am, ao in zip(accs, o_accs):
+                d = jnp.abs(am - ao)
+                layers.append({"max_ulp": int(jnp.max(d)),
+                               "mean_ulp": float(jnp.mean(d))})
+        top1 = logits.argmax(axis=-1)
+        out[method] = {
+            "top1_vs_oracle": float((top1 == o_top1).mean()),
+            "top1_vs_float": float((top1 == f_top1).mean()),
+            "psnr_db": psnr(o_logits, logits, peak=peak),
+            "layers": layers,
+        }
+    return out
+
+
+def format_report(report: dict, title: str = "") -> str:
+    """Table-10-style text table (one row per multiplier method)."""
+    lines = []
+    if title:
+        lines.append(title)
+    head = (f"{'method':<18} {'top1 vs oracle':>14} {'top1 vs float':>14} "
+            f"{'PSNR dB':>9}  per-layer max ulp")
+    lines += [head, "-" * len(head)]
+    for method, r in report.items():
+        ulps = " ".join(str(layer["max_ulp"]) for layer in r["layers"]) or "-"
+        p = r["psnr_db"]
+        ptxt = "   inf" if p > 200 else f"{p:6.1f}"
+        lines.append(f"{method:<18} {r['top1_vs_oracle']:>14.3f} "
+                     f"{r['top1_vs_float']:>14.3f} {ptxt:>9}  {ulps}")
+    return "\n".join(lines)

@@ -1,0 +1,127 @@
+"""Quantized forward runner with per-layer multiplier routing (DESIGN.md §14).
+
+Every matmul/conv of the calibrated network runs on *integer* operands and
+routes each scalar product through the selected paper multiplier:
+
+  int8               -- jnp.matmul with int32 accumulation: THE exact-
+                        quantized oracle every other method is judged against.
+  refmlm/refmlm_kom3 -- paper's recursive multiplier; error-free, so the
+                        int32 accumulators (and hence the logits) are
+                        bit-identical to the oracle.
+  schoolbook_int16 / karatsuba_int16 -- balanced-limb decomposition of the
+                        already-quantized operands; exact reconstruction,
+                        also bit-identical to the oracle.
+  mitchell / mitchell_ecc{k} / odma -- approximate LNS products; the error
+                        report measures their drift.
+  exact              -- float32 forward (no quantization): the float
+                        reference for the accuracy columns.
+
+Bit-identity argument (refmlm == int8 oracle): both paths quantize with the
+same static scales, so they see identical int32 operands; refmlm's scalar
+product equals the exact product on every operand pair (paper theorem,
+tests/test_refmlm.py); identical products give identical int32 accumulator
+sums; every following op (bias add, ReLU, pool, rescale) is an elementwise
+or monotonic op on those identical accumulators. Overflow is impossible:
+|q| <= 255, K <= a few hundred, so |acc| <= 255^2 * K << 2^31.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.approx_matmul import METHODS, scalar_multiplier
+from repro.core.quant import balanced_limbs
+from repro.infer.calibrate import (CalibratedModel, _im2col, _maxpool,
+                                   float_forward)
+from repro.infer.graph import Conv, Dense, Flatten
+
+#: methods the routed integer forward accepts ('exact' bypasses quantization).
+INFER_METHODS = METHODS
+
+
+def _routed_int_matmul(qa: Array, qw: Array, method: str, nbits: int,
+                       row_chunk: int) -> Array:
+    """(M,K) x (K,N) on signed int32 operands -> int32 accumulators, with
+    every scalar product produced by `method`'s multiplier."""
+    if method == "int8":
+        return jnp.matmul(qa, qw, preferred_element_type=jnp.int32)
+    if method in ("schoolbook_int16", "karatsuba_int16"):
+        kar = method == "karatsuba_int16"
+        w = 7 if kar else 8
+        ahi, alo = balanced_limbs(qa, w)
+        bhi, blo = balanced_limbs(qw, w)
+        dot = partial(jnp.matmul, preferred_element_type=jnp.int32)
+        hh, ll = dot(ahi, bhi), dot(alo, blo)
+        if kar:
+            mid = dot(ahi + alo, bhi + blo) - hh - ll
+        else:
+            mid = dot(ahi, blo) + dot(alo, bhi)
+        # Exact: equals qa @ qw bit-for-bit (int32 shifts cannot overflow at
+        # |q| <= 255, K <= a few hundred).
+        return (hh << (2 * w)) + (mid << w) + ll
+
+    mult = scalar_multiplier(method, nbits)
+    mag_w, sgn_w = jnp.abs(qw), jnp.sign(qw)
+
+    def row_block(a_blk: Array) -> Array:      # (r, K) -> (r, N)
+        mag = mult(jnp.abs(a_blk)[:, :, None], mag_w[None, :, :])
+        sgn = jnp.sign(a_blk)[:, :, None] * sgn_w[None, :, :]
+        return jnp.sum(mag * sgn, axis=1, dtype=jnp.int32)
+
+    m = qa.shape[0]
+    pad = (-m) % row_chunk
+    blocks = jnp.pad(qa, ((0, pad), (0, 0))).reshape(-1, row_chunk, qa.shape[1])
+    return jax.lax.map(row_block, blocks).reshape(-1, qw.shape[1])[:m]
+
+
+def forward(cal: CalibratedModel, x: Array, method: str = "int8", *,
+            per_layer: dict[int, str] | None = None, collect: bool = False,
+            row_chunk: int = 128):
+    """Run the calibrated network. x: (B, H, W) float32 in [0, 1].
+
+    `method` is the default multiplier for every multiplying layer;
+    `per_layer` pins a (quantized) method per layer index on top of it.
+    Returns logits (B, num_classes) float32; with collect=True returns
+    (logits, [per-multiplying-layer int32 accumulators]) for the error
+    report's ulp-drift columns.
+    """
+    if method == "exact":
+        if per_layer:
+            raise ValueError("per_layer pinning needs a quantized method; "
+                             "use 'int8' for exact-quantized layers")
+        logits = float_forward(cal.graph, cal.params, x)
+        return (logits, []) if collect else logits
+    if method not in INFER_METHODS:
+        raise ValueError(f"unknown method {method!r}; valid: {INFER_METHODS}")
+    per_layer = per_layer or {}
+    qmax = cal.qmax
+    accs = []
+    a = jnp.asarray(x, jnp.float32)[..., None]
+    for i, (layer, q) in enumerate(zip(cal.graph.layers, cal.lq)):
+        if isinstance(layer, Flatten):
+            a = a.reshape(a.shape[0], -1)
+            continue
+        m = per_layer.get(i, method)
+        if m not in INFER_METHODS or m == "exact":
+            raise ValueError(f"layer {i}: invalid pinned method {m!r}")
+        qa = jnp.clip(jnp.round(a / q.a_scale), -qmax, qmax).astype(jnp.int32)
+        if isinstance(layer, Dense):
+            acc = _routed_int_matmul(qa, q.qweight, m, cal.nbits, row_chunk)
+        else:
+            patches = _im2col(qa, layer.ksize)
+            b_, h_, w_, k_ = patches.shape
+            acc = _routed_int_matmul(patches.reshape(-1, k_), q.qweight, m,
+                                     cal.nbits, row_chunk)
+            acc = acc.reshape(b_, h_, w_, -1)
+        acc = acc + q.qbias
+        if collect:
+            accs.append(acc)
+        a = acc.astype(jnp.float32) * (q.a_scale * q.w_scale)
+        if layer.relu:
+            a = jnp.maximum(a, 0.0)
+        if isinstance(layer, Conv) and layer.pool > 1:
+            a = _maxpool(a, layer.pool)
+    return (a, accs) if collect else a

@@ -19,9 +19,12 @@ Layers:
   controller.py -- `AdaptiveBatchController`, the §13 target-latency
                    feedback loop picking per-bucket flush size/deadline
                    from the warm plan-cost ledger;
-  executor.py   -- micro-batch -> `apply_filter_batch` dispatch with the
-                   LRU plan memo, pow-2 batch rounding, and the §12
-                   bisection / degraded-fallback machinery;
+  workload.py   -- the §14 pluggable `Workload` classes (validation,
+                   dispatch, warmup, cost model); 'filter' is built in,
+                   `repro.infer.serving.InferWorkload` adds 'infer';
+  executor.py   -- micro-batch -> workload dispatch with the LRU plan
+                   memo, pow-2 batch rounding, and the §12 bisection /
+                   degraded-fallback machinery;
   pool.py       -- `ExecutorPool`, rendezvous-routed executors over
                    device subsets with probe-and-rebuild failover;
   server.py     -- `ImageFilterServer` (worker thread, `submit`, stats);
@@ -68,6 +71,7 @@ from repro.serve.request import (
     serve_key,
 )
 from repro.serve.server import ImageFilterServer, ServerConfig
+from repro.serve.workload import FilterWorkload, Workload, resolve_workloads
 
 __all__ = [
     "FLUSH_REASONS",
@@ -81,6 +85,7 @@ __all__ = [
     "ExecutorPool",
     "FilterFuture",
     "FilterRequest",
+    "FilterWorkload",
     "FlushPolicy",
     "ImageFilterServer",
     "MicroBatch",
@@ -92,8 +97,10 @@ __all__ = [
     "ShapeBucketedBatcher",
     "ShedRequest",
     "TenantOverQuota",
+    "Workload",
     "bucket_key",
     "next_pow2",
     "request_weight",
+    "resolve_workloads",
     "serve_key",
 ]

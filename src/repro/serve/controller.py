@@ -41,6 +41,7 @@ import threading
 from typing import Iterable
 
 from repro.serve.request import FilterRequest
+from repro.serve.workload import Workload, resolve_workloads
 
 #: tail-latency safety margin over the mean service-time estimate: the
 #: controller treats `safety * s(n)` as the batch's p99. Absorbs both
@@ -80,9 +81,11 @@ class AdaptiveBatchController:
     def __init__(self, max_batch: int, max_delay_s: float, *,
                  safety: float = DEFAULT_SAFETY,
                  alpha: float = DEFAULT_ALPHA,
-                 backend: str | None = None) -> None:
+                 backend: str | None = None,
+                 workloads: dict[str, Workload] | None = None) -> None:
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self._workloads = resolve_workloads(workloads)
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_s)
         self.safety = float(safety)
@@ -100,27 +103,19 @@ class AdaptiveBatchController:
 
     # ------------------------------------------------------------ cost model
     def _model_bound(self, key: str, req: FilterRequest, n: int) -> float:
-        """Roofline lower bound (seconds) of this bucket's resolved §11
-        plan at traced batch size `n`, memoised per (bucket, n)."""
+        """Analytic lower bound (seconds) of this bucket's `n`-sized
+        dispatch -- delegated to the request's workload class (§14; the
+        filter workload prices its resolved §11 plan with the conv
+        roofline), memoised per (bucket, n). A workload without a model
+        contributes the observation floor until real dispatches land."""
         memo = (key, n)
         bound = self._bounds.get(memo)
         if bound is None:
-            from repro.filters.bank import get_filter
-            from repro.filters.pipeline import resolve_filter_plan
-            from repro.roofline.conv_model import plan_cost
-            from repro.tuning.cache import backend_key
-            h, w = req.img.shape
-            spec = get_filter(req.filt)
-            plan = resolve_filter_plan(spec, n, h, w, method=req.method,
-                                       mult_impl=req.mult_impl)
-            kh, kw = ((len(spec.sep_col), len(spec.sep_row))
-                      if plan.dataflow == "fused" else spec.ksize)
-            cost = plan_cost(plan.dataflow, plan.mult_impl, n, h, w, kh, kw,
-                             block_rows=plan.block_rows,
-                             block_cols=plan.block_cols,
-                             batch_fold=bool(plan.batch_fold),
-                             backend=self._backend or backend_key())
-            bound = max(cost.lower_bound_s, MIN_SERVICE_S)
+            wl = self._workloads.get(req.workload)
+            cost = (wl.model_bound(req, n, backend=self._backend)
+                    if wl is not None else None)
+            bound = max(cost if cost is not None else MIN_SERVICE_S,
+                        MIN_SERVICE_S)
             self._bounds[memo] = bound
         return bound
 

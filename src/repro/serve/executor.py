@@ -2,10 +2,13 @@
 (DESIGN.md §10), with the failure-isolation and degradation machinery of
 DESIGN.md §12.
 
-One `MicroBatch` becomes one `apply_filter_batch` call: the bucket's
+One `MicroBatch` becomes one workload dispatch (DESIGN.md §14): the
+bucket's requests hand off to their registered `Workload` class -- for
+the default filter workload, one `apply_filter_batch` call where the
 requests stack into an (N, H, W) batch that rides the §8 batch fold, runs
 under the bucket's execution mode ('local' | 'sharded' | 'streamed', §9),
-and splits back per request. Bit-exactness end to end is inherited, not
+and splits back per request; for the infer workload, one batched
+quantized forward pass (`repro.infer.serving`). Bit-exactness end to end is inherited, not
 re-argued: the batch fold embeds each image's own zero halo and every
 exec mode is bit-identical to local, so a request's output is the same
 bytes no matter which coalesced batch, bucket, or exec mode served it
@@ -73,11 +76,12 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.filters.pipeline import apply_filter_batch, resolve_filter_plan
+from repro.filters.pipeline import resolve_filter_plan
 from repro.runtime.fault import SITE_EXECUTE
 from repro.runtime.fault import probe as fault_probe
 from repro.serve.batcher import MicroBatch
 from repro.serve.request import FilterRequest, bucket_key, serve_key
+from repro.serve.workload import Workload, resolve_workloads
 from repro.tuning import cache_generation
 
 #: exec modes eligible for the per-bucket local fallback (§12)
@@ -97,9 +101,10 @@ class BatchExecutor:
                  tile: tuple[int, int] = (256, 256),
                  tile_batch: int = 8, degrade_after: int = 2,
                  plan_memo_max: int = 256, name: str = "",
-                 on_dispatch: Callable[[str, str, bool], None] | None = None
-                 ) -> None:
+                 on_dispatch: Callable[[str, str, bool], None] | None = None,
+                 workloads: dict[str, Workload] | None = None) -> None:
         self.interpret = interpret
+        self.workloads = resolve_workloads(workloads)
         self.pad_pow2 = pad_pow2
         self.devices = (tuple(devices) if isinstance(devices, (list, tuple))
                         else devices)
@@ -190,7 +195,6 @@ class BatchExecutor:
         """One dispatch of a coalesced bucket slice, no retry; returns one
         output per request. `exec_override` is the §12 fallback hook."""
         r0 = requests[0]
-        h, w = r0.img.shape
         n = len(requests)
         traced_n = next_pow2(n) if self.pad_pow2 else n
         skey = serve_key(key, traced_n)
@@ -204,12 +208,11 @@ class BatchExecutor:
         tag = f"|member={self.name}" if self.name else ""
         fault_probe(SITE_EXECUTE, key=f"{skey}|exec={mode}{tag}",
                     seqs=tuple(r.seq for r in requests))
-        kw = self._exec_kw(mode, r0.filt, r0.method, r0.mult_impl,
-                           traced_n, h, w)
-        return apply_filter_batch(
-            [r.img for r in requests], r0.filt, pad_to=traced_n,
-            method=r0.method, nbits=r0.nbits,
-            interpret=self.interpret, **kw)
+        wl = self.workloads.get(r0.workload)
+        if wl is None:
+            raise KeyError(f"no workload {r0.workload!r} registered "
+                           f"(have: {tuple(self.workloads)})")
+        return wl.execute(self, requests, traced_n, mode)
 
     def _report(self, key: str, mode: str, ok: bool) -> None:
         """Tell the owning pool (if any) how one dispatch went -- the §13
@@ -325,19 +328,21 @@ class BatchExecutor:
     def warm(self, shape: tuple[int, int], filt: str, *,
              method: str = "refmlm", mult_impl: str = "auto",
              exec_mode: str = "local", nbits: int = 8, n: int = 1,
-             priority: str = "normal") -> str:
+             priority: str = "normal", workload: str = "filter") -> str:
         """Pre-compile one (bucket, batch size) point with a zero dummy
         batch; returns the serve_key it warmed. `priority` only names the
         warmed ledger bucket (classes never coalesce, §13) -- the compiled
-        executable underneath is priority-blind and shared."""
+        executable underneath is priority-blind and shared. `workload`
+        selects the §14 workload class doing the compiling (filter by
+        default; `filt` then names that workload's target, e.g. an infer
+        model)."""
         h, w = shape
         traced_n = next_pow2(n) if self.pad_pow2 else n
         key = bucket_key(filt, method, mult_impl, exec_mode, nbits, h, w,
-                         priority)
-        kw = self._exec_kw(exec_mode, filt, method, mult_impl, traced_n, h, w)
-        apply_filter_batch([np.zeros((h, w), np.int32)] * traced_n, filt,
-                           method=method, nbits=nbits,
-                           interpret=self.interpret, **kw)
+                         priority, workload)
+        self.workloads[workload].warm(
+            self, (h, w), filt, method=method, mult_impl=mult_impl,
+            exec_mode=exec_mode, nbits=nbits, traced_n=traced_n)
         skey = serve_key(key, traced_n)
         with self._lock:
             self.warmed.add(skey)

@@ -229,16 +229,17 @@ class ExecutorPool:
     def warm(self, shape: tuple[int, int], filt: str, *,
              method: str = "refmlm", mult_impl: str = "auto",
              exec_mode: str = "local", nbits: int = 8, n: int = 1,
-             priority: str = "normal") -> str:
+             priority: str = "normal", workload: str = "filter") -> str:
         """Warm one serve point on the member that will actually serve it
         (same signature as `BatchExecutor.warm`, so `warmup.sweep` and
         `ImageFilterServer.warmup()` drive pools unchanged)."""
         h, w = shape
         key = bucket_key(filt, method, mult_impl, exec_mode, nbits, h, w,
-                         priority)
+                         priority, workload)
         return self.route(key).executor.warm(
             (h, w), filt, method=method, mult_impl=mult_impl,
-            exec_mode=exec_mode, nbits=nbits, n=n, priority=priority)
+            exec_mode=exec_mode, nbits=nbits, n=n, priority=priority,
+            workload=workload)
 
     @property
     def warmed(self) -> set:

@@ -66,12 +66,18 @@ class DeadlineExceeded(RuntimeError):
 
 
 def bucket_key(filt: str, method: str, mult_impl: str, exec_mode: str,
-               nbits: int, h: int, w: int, priority: str = "normal") -> str:
+               nbits: int, h: int, w: int, priority: str = "normal",
+               workload: str = "filter") -> str:
     """Coalescing key: requests sharing it may ride one micro-batch.
     Priority is part of the key (DESIGN.md §13): classes never coalesce,
-    so shedding or deprioritising 'low' can never touch a 'high' batch."""
-    return (f"{filt}/{method}/{mult_impl}/{exec_mode}/b{nbits}/{h}x{w}"
-            f"/{priority}")
+    so shedding or deprioritising 'low' can never touch a 'high' batch.
+    A non-default workload class (DESIGN.md §14) is appended as a suffix --
+    filter keys keep their historical spelling, and the exec mode stays
+    the 4th segment (the pool's `_native_mode` contract) -- so distinct
+    workloads can never share a batch."""
+    key = (f"{filt}/{method}/{mult_impl}/{exec_mode}/b{nbits}/{h}x{w}"
+           f"/{priority}")
+    return key if workload == "filter" else f"{key}/{workload}"
 
 
 def serve_key(bucket: str, n: int) -> str:
@@ -145,12 +151,13 @@ class FilterRequest:
     tenant: str = "default"      # quota account (admission.py)
     slo: float | None = None     # absolute SLO instant (controller target)
     weight: int = 1              # weighted admission slots (request_weight)
+    workload: str = "filter"     # serving workload class (DESIGN.md §14)
 
     @property
     def key(self) -> str:
         h, w = self.img.shape
         return bucket_key(self.filt, self.method, self.mult_impl, self.exec,
-                          self.nbits, h, w, self.priority)
+                          self.nbits, h, w, self.priority, self.workload)
 
     @property
     def rank(self) -> int:

@@ -61,10 +61,6 @@ import threading
 import time
 from typing import Callable, Sequence
 
-import numpy as np
-
-from repro.filters.bank import get_filter
-from repro.filters.conv import MULT_IMPLS
 from repro.filters.pipeline import EXEC_MODES
 from repro.serve.admission import (
     AdmissionGate,
@@ -81,8 +77,8 @@ from repro.serve.request import (
     DeadlineExceeded,
     FilterFuture,
     FilterRequest,
-    request_weight,
 )
+from repro.serve.workload import Workload, resolve_workloads
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +112,9 @@ class ServerConfig:
     #                                 int count / None=all) per member
     drain_after: int = 3            # member consecutive scale-out failures
     #                                 before probe-and-rebuild
+    # ------------------------------- workload classes (DESIGN.md §14)
+    workloads: dict[str, Workload] | None = None  # extra classes beyond
+    #                                 the built-in 'filter' (e.g. 'infer')
 
 
 class ImageFilterServer:
@@ -128,6 +127,7 @@ class ImageFilterServer:
             raise ValueError(f"exec must be one of {EXEC_MODES}, got "
                              f"{self.config.exec!r}")
         self._clock = clock
+        self._workloads = resolve_workloads(self.config.workloads)
         self._gate = AdmissionGate(
             self.config.max_pending, self.config.admission_timeout_s, clock,
             tenant_quota=self.config.tenant_quota,
@@ -135,7 +135,8 @@ class ImageFilterServer:
             on_wait=self._on_gate_wait if self.config.overload_shed else None)
         self._controller = (
             AdaptiveBatchController(self.config.max_batch,
-                                    self.config.max_delay_ms / 1e3)
+                                    self.config.max_delay_ms / 1e3,
+                                    workloads=self._workloads)
             if self.config.adaptive else None)
         self._batcher = ShapeBucketedBatcher(
             self.config.max_batch, self.config.max_delay_ms / 1e3, clock,
@@ -144,7 +145,8 @@ class ImageFilterServer:
             interpret=self.config.interpret, pad_pow2=self.config.pad_pow2,
             tile=self.config.tile, tile_batch=self.config.tile_batch,
             degrade_after=self.config.degrade_after,
-            plan_memo_max=self.config.plan_memo_max)
+            plan_memo_max=self.config.plan_memo_max,
+            workloads=self._workloads)
         if self.config.pool is not None:
             self._executor: BatchExecutor | ExecutorPool = ExecutorPool(
                 self.config.pool, drain_after=self.config.drain_after,
@@ -174,16 +176,21 @@ class ImageFilterServer:
                deadline_ms: float | None = None,
                timeout: float | None = None,
                priority: str = "normal", tenant: str = "default",
-               slo_ms: float | None = None) -> FilterFuture:
-        """Admit one (H, W) grayscale image; returns its `FilterFuture`.
+               slo_ms: float | None = None,
+               workload: str = "filter") -> FilterFuture:
+        """Admit one request; returns its `FilterFuture`.
 
-        Validation happens here, on the client thread, so a bad request
-        fails fast instead of poisoning a coalesced batch: the filter name
-        must exist, `exec` must be a §9 mode, `mult_impl` a known
-        tap-product implementation, `priority` a §13 class, and the image
-        a single 2-D (or (H, W, 1)) frame. Blocks while the server (or
-        `tenant`'s quota) is out of weighted in-flight slots (up to
-        `timeout`, then `ServerOverloaded` / `TenantOverQuota`).
+        `workload` selects the §14 serving class ('filter' by default;
+        extra classes come from `ServerConfig.workloads`), and `filt`
+        names that workload's target -- a bank filter, or e.g. an infer
+        model. Validation happens here, on the client thread, so a bad
+        request fails fast instead of poisoning a coalesced batch: `exec`
+        must be a §9 mode, `priority` a §13 class, and the payload must
+        pass the workload's own validation (for 'filter': a known filter
+        name, a known `mult_impl`, one 2-D or (H, W, 1) frame). Blocks
+        while the server (or `tenant`'s quota) is out of weighted
+        in-flight slots (up to `timeout`, then `ServerOverloaded` /
+        `TenantOverQuota`).
 
         `deadline_ms` (default `config.default_deadline_ms`) is the §12
         shed deadline: if the request is still queued that long after
@@ -198,19 +205,16 @@ class ImageFilterServer:
         if exec_mode not in EXEC_MODES:
             raise ValueError(f"exec must be one of {EXEC_MODES}, got "
                              f"{exec_mode!r}")
-        if mult_impl not in MULT_IMPLS:
-            raise ValueError(f"mult_impl must be one of {MULT_IMPLS}, got "
-                             f"{mult_impl!r}")
         if priority not in PRIORITIES:
             raise ValueError(f"priority must be one of {PRIORITIES}, got "
                              f"{priority!r}")
-        get_filter(filt)                     # unknown names fail fast
-        arr = np.asarray(img)
-        if arr.ndim == 3 and arr.shape[-1] == 1:
-            arr = arr[..., 0]
-        if arr.ndim != 2:
-            raise ValueError(f"expected one (H, W) image per request, got "
-                             f"shape {arr.shape}")
+        wl = self._workloads.get(workload)
+        if wl is None:
+            raise ValueError(f"unknown workload {workload!r}; registered: "
+                             f"{tuple(self._workloads)}")
+        arr = wl.validate(img, target=filt, method=method,
+                          mult_impl=mult_impl, exec_mode=exec_mode,
+                          nbits=int(nbits))
         if self._closing:
             raise ServerClosed("server is closed")
         if self.config.fail_fast_degraded and not self._is_healthy():
@@ -220,7 +224,7 @@ class ImageFilterServer:
                 "server is degraded; refusing admission (fail_fast_degraded)")
         if deadline_ms is None:
             deadline_ms = self.config.default_deadline_ms
-        weight = request_weight(*arr.shape)
+        weight = wl.weight(arr)
         self._gate.acquire(weight, tenant, timeout)
         future = FilterFuture()
         with self._cond:
@@ -236,7 +240,8 @@ class ImageFilterServer:
                                 nbits=int(nbits), future=future,
                                 submitted=now, seq=self._seq,
                                 deadline=deadline, priority=priority,
-                                tenant=tenant, slo=slo, weight=weight)
+                                tenant=tenant, slo=slo, weight=weight,
+                                workload=workload)
             self._batcher.add(req)
             self._stats["submitted"] += 1
             self._cond.notify_all()
@@ -244,13 +249,17 @@ class ImageFilterServer:
 
     def warmup(self, shapes, filters=("gaussian3",), *, methods=("refmlm",),
                mult_impls=("auto",), execs=None, batches=(1,),
-               nbits: int = 8, priorities=("normal",)) -> list[str]:
+               nbits: int = 8, priorities=("normal",),
+               workload: str = "filter") -> list[str]:
         """Pre-compile the cross product of serve points; returns the warmed
-        `serve_key`s (see `repro.serve.warmup` for the CLI)."""
+        `serve_key`s (see `repro.serve.warmup` for the CLI). `workload`
+        picks the §14 class being warmed; `filters` then names that
+        workload's targets (infer model names for 'infer')."""
         from repro.serve.warmup import sweep
         execs = (self.config.exec,) if execs is None else tuple(execs)
         return sweep(self._executor, shapes, filters, methods, mult_impls,
-                     execs, batches, nbits=nbits, priorities=priorities)
+                     execs, batches, nbits=nbits, priorities=priorities,
+                     workload=workload)
 
     def _is_healthy(self) -> bool:
         """Healthy = no worker catch-all error and no exec-mode fallback."""

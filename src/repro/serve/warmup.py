@@ -37,12 +37,14 @@ def parse_shapes(text: str) -> list[tuple[int, int]]:
 
 def sweep(executor: BatchExecutor, shapes, filters, methods, mult_impls,
           execs, batches, *, nbits: int = 8, priorities=("normal",),
-          verbose: bool = False) -> list[str]:
+          workload: str = "filter", verbose: bool = False) -> list[str]:
     """Warm the cross product of serve points on `executor`; returns the
     warmed keys. The one sweep definition shared by this CLI and
     `ImageFilterServer.warmup()`. `priorities` widens the warmed-ledger
     cross product (§13 buckets are per-class); the compiled executables
-    are priority-blind, so extra classes cost bookkeeping, not compiles."""
+    are priority-blind, so extra classes cost bookkeeping, not compiles.
+    `workload` selects the §14 class being warmed ('filter' by default;
+    `filters` then names that workload's targets)."""
     keys = []
     for (h, w), filt, method, impl, em, n, pri in itertools.product(
             shapes, filters, methods, mult_impls, execs, batches,
@@ -50,7 +52,7 @@ def sweep(executor: BatchExecutor, shapes, filters, methods, mult_impls,
         t0 = time.perf_counter()
         key = executor.warm((int(h), int(w)), filt, method=method,
                             mult_impl=impl, exec_mode=em, nbits=nbits,
-                            n=int(n), priority=pri)
+                            n=int(n), priority=pri, workload=workload)
         keys.append(key)
         if verbose:
             dt = (time.perf_counter() - t0) * 1e3

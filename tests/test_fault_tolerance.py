@@ -217,12 +217,12 @@ class TestExecutorExactlyOnce:
     def test_run_never_raises_when_datapath_always_raises(self, monkeypatch):
         """Even a hard-broken datapath resolves every future exactly once
         (all isolated), and run() itself never raises."""
-        import repro.serve.executor as ex_mod
+        import repro.serve.workload as wl_mod
 
         def boom(*a, **kw):
             raise RuntimeError("datapath down")
 
-        monkeypatch.setattr(ex_mod, "apply_filter_batch", boom)
+        monkeypatch.setattr(wl_mod, "apply_filter_batch", boom)
         ex = BatchExecutor()
         batch, reqs = self._batch(3)
         ex.run(batch)                   # must not raise

@@ -1,0 +1,68 @@
+"""approx_matmul impl routing: the Pallas matmul kernels must be
+bit-identical to the reference semantics (DESIGN.md §14 satellite --
+the kernels stop being benchmark-only)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.approx_matmul import (IMPLS, PALLAS_LIMB_METHODS,
+                                      PALLAS_LNS_METHODS, matmul)
+from repro.core.quant import quantize_magnitude
+
+RNG = np.random.default_rng(7)
+A = RNG.standard_normal((5, 19)).astype(np.float32)
+B = RNG.standard_normal((19, 11)).astype(np.float32)
+
+
+@pytest.mark.parametrize("method", [*PALLAS_LNS_METHODS, *PALLAS_LIMB_METHODS])
+def test_pallas_bit_identical_to_reference(method):
+    ref = np.asarray(matmul(A, B, method, impl="reference"))
+    pal = np.asarray(matmul(A, B, method, impl="pallas", interpret=True))
+    assert np.array_equal(ref, pal)
+
+
+def test_auto_resolves_to_reference_on_cpu_interpret():
+    ref = np.asarray(matmul(A, B, "mitchell", impl="reference"))
+    auto = np.asarray(matmul(A, B, "mitchell", impl="auto"))
+    assert np.array_equal(ref, auto)
+
+
+def test_pallas_falls_back_for_kernelless_methods():
+    """odma / refmlm have no Pallas kernel; impl='pallas' keeps reference
+    semantics instead of erroring."""
+    for method in ("odma", "refmlm"):
+        ref = np.asarray(matmul(A, B, method, impl="reference"))
+        pal = np.asarray(matmul(A, B, method, impl="pallas", interpret=True))
+        assert np.array_equal(ref, pal)
+
+
+def test_batched_lhs_pallas():
+    a3 = RNG.standard_normal((3, 4, 19)).astype(np.float32)
+    ref = np.asarray(matmul(a3, B, "karatsuba_int16", impl="reference"))
+    pal = np.asarray(matmul(a3, B, "karatsuba_int16", impl="pallas",
+                            interpret=True))
+    assert pal.shape == (3, 4, 11)
+    assert np.array_equal(ref, pal)
+
+
+def test_unknown_impl_rejected():
+    with pytest.raises(ValueError, match="impl must be one of"):
+        matmul(A, B, "mitchell", impl="fpga")
+    assert set(IMPLS) == {"reference", "pallas", "auto"}
+
+
+def test_kernel_int32_accumulation_bit_identical():
+    """The raw kernel's int32 accumulators equal the pure-jnp oracle's --
+    not just the float outputs after rescale."""
+    from repro.kernels.mitchell_matmul import mitchell_matmul_kernel
+    from repro.kernels.ref import mitchell_matmul_ref
+    qa = quantize_magnitude(jnp.asarray(A), 8)
+    qb = quantize_magnitude(jnp.asarray(B), 8)
+    sa = jnp.pad(qa.magnitude * qa.sign, ((0, 11), (0, 13)))   # 16 x 32
+    sb = jnp.pad(qb.magnitude * qb.sign, ((0, 13), (0, 117)))  # 32 x 128
+    acc = mitchell_matmul_kernel(sa, sb, num_ecc=0, case_split=True,
+                                 block_m=16, block_n=128, block_k=32,
+                                 interpret=True)
+    ref = mitchell_matmul_ref(sa, sb, num_ecc=0, case_split=True)
+    assert acc.dtype == jnp.int32
+    assert np.array_equal(np.asarray(acc), np.asarray(ref))

@@ -1,0 +1,87 @@
+"""core/quant.py edge cases: karatsuba w=7 range-bound saturation,
+negative-value limb round-trips, and calibration-scale overflow guards
+(DESIGN.md §2/§14)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import (balanced_limbs, limbs_to_int, quantize_limbs,
+                              quantize_magnitude)
+
+
+def test_karatsuba_limbs_confined_to_w7_range():
+    """karatsuba=True must keep BOTH limbs (and their sum, the middle-pass
+    operand) inside int8's [-64, 63] window -- the w=7 range bound."""
+    x = np.linspace(-3.0, 3.0, 4001).astype(np.float32)
+    d, scale = quantize_limbs(jnp.asarray(x), karatsuba=True)
+    hi, lo = np.asarray(d.hi), np.asarray(d.lo)
+    assert d.limb_bits == 7
+    assert hi.min() >= -64 and hi.max() <= 63
+    assert lo.min() >= -64 and lo.max() <= 63
+    assert (hi + lo).min() >= -128 and (hi + lo).max() <= 127  # fits int8
+    # round-trip: limbs recombine to the quantized integer
+    q = np.asarray(limbs_to_int(d))
+    expect = np.clip(np.round(x / float(scale)), -8127, 8127)
+    assert np.array_equal(q, expect.astype(np.int64))
+
+
+def test_karatsuba_saturates_at_qlim_8127():
+    """Values at/above the representable max pin to qlim = 63*128 + 63:
+    the hi limb saturates at 63 instead of overflowing the int8 window."""
+    x = np.array([-1e6, -1.0, 0.0, 1.0, 1e6], dtype=np.float32)
+    d, scale = quantize_limbs(jnp.asarray(x), karatsuba=True)
+    q = np.asarray(limbs_to_int(d))
+    assert q[-1] == 8127 and q[0] == -8127
+    assert np.asarray(d.hi)[-1] == 63 and np.asarray(d.lo)[-1] == 63
+    assert float(scale) == pytest.approx(1e6 / 8127)
+
+
+def test_schoolbook_saturates_at_qlim_32639():
+    x = np.array([7.0, -7.0], dtype=np.float32)
+    d, _ = quantize_limbs(jnp.asarray(x), karatsuba=False)
+    assert d.limb_bits == 8
+    q = np.asarray(limbs_to_int(d))
+    assert q[0] == 32639 and q[1] == -32639
+
+
+@pytest.mark.parametrize("w", [7, 8])
+def test_negative_limb_round_trip_exhaustive(w):
+    """Every representable signed integer splits into balanced limbs and
+    recombines exactly -- including the negative half, where the balanced
+    remainder forces a carry into hi."""
+    lim = 63 * 128 + 63 if w == 7 else 32639
+    q = jnp.arange(-lim, lim + 1, dtype=jnp.int32)
+    hi, lo = balanced_limbs(q, w)
+    half = 1 << (w - 1)
+    assert int(jnp.min(lo)) >= -half and int(jnp.max(lo)) <= half - 1
+    assert np.array_equal(np.asarray((hi << w) + lo), np.asarray(q))
+
+
+def test_negative_quantize_limbs_round_trip():
+    rng = np.random.default_rng(0)
+    x = -np.abs(rng.standard_normal(512)).astype(np.float32)
+    for kar in (True, False):
+        d, scale = quantize_limbs(jnp.asarray(x), karatsuba=kar)
+        q = np.asarray(limbs_to_int(d))
+        assert (q <= 0).all()
+        back = q * float(scale)
+        # quantization error bounded by half a step
+        assert np.max(np.abs(back - x)) <= float(scale) * 0.5 + 1e-7
+
+
+def test_magnitude_scale_floor_guards_zero_input():
+    """An all-zero tensor must not divide by zero: the 1e-30 floor keeps
+    the scale finite and the magnitudes zero."""
+    q = quantize_magnitude(jnp.zeros((4, 4)), 8)
+    assert np.isfinite(float(q.scale))
+    assert not np.asarray(q.magnitude).any()
+    d, scale = quantize_limbs(jnp.zeros((4,)), karatsuba=True)
+    assert np.isfinite(float(scale))
+    assert not np.asarray(limbs_to_int(d)).any()
+
+
+def test_magnitude_saturation_at_qmax():
+    """Magnitudes clip to 2^nbits - 1 even under round-up at the top end."""
+    x = jnp.asarray(np.array([255.4999, 255.5, 256.0], dtype=np.float32))
+    q = quantize_magnitude(x, 8)
+    assert int(np.asarray(q.magnitude).max()) == 255
