@@ -4,7 +4,8 @@ micro-batching server.
 
     PYTHONPATH=src python examples/serve_images.py \
         [--clients 4] [--requests 16] [--max-batch 8] [--max-delay-ms 2] \
-        [--exec local|sharded|streamed] [--devices N] [--seed 0] [--infer]
+        [--exec local|sharded|streamed] [--devices N] [--seed 0] \\
+        [--infer] [--trace out.jsonl]
 
 Each client thread plays a user stream: a random mix of image shapes and
 bank filters, submitted as fast as the admission gate allows. Concurrent
@@ -14,6 +15,14 @@ datapath (the §8 batch fold), so throughput rises with load while every
 response stays bit-identical to the single-image call (spot-checked at
 the end). The run prints the request-latency percentiles, the
 batch-occupancy histogram, and the flush-trigger mix.
+
+``--trace out.jsonl`` turns on the §15 request tracing: every request's
+span (submit -> admit -> enqueue -> flush -> dispatch -> fulfil) is
+written through to the JSONL file, and the run ends by printing the
+Perfetto quickstart -- convert with
+`python -m repro.obs.snapshot out.jsonl --chrome out.chrome.json` and
+open the Chrome trace at https://ui.perfetto.dev (one track per bucket,
+queued + dispatch slices per request).
 
 ``--infer`` turns the run into the §14 mixed-workload scenario: the same
 server additionally registers `InferWorkload` (the calibrated MLP head +
@@ -101,6 +110,9 @@ def main():
     ap.add_argument("--infer", action="store_true",
                     help="mixed §14 scenario: interleave classification "
                          "requests (InferWorkload) with the filter traffic")
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="write the §15 request trace (JSONL) here; "
+                         "convert via python -m repro.obs.snapshot")
     args = ap.parse_args()
 
     infer_models = build_infer_models() if args.infer else None
@@ -112,7 +124,8 @@ def main():
     cfg = ServerConfig(max_batch=args.max_batch,
                        max_delay_ms=args.max_delay_ms,
                        max_pending=4 * args.clients * args.requests,
-                       exec=args.exec_mode, workloads=workloads)
+                       exec=args.exec_mode, workloads=workloads,
+                       trace=args.trace)
     latencies, done = [], []
     lock = threading.Lock()
 
@@ -183,6 +196,13 @@ def main():
     kinds = ", ".join(f"{n} {wl}" for wl, n in checked.items() if n)
     print(f"spot check ({kinds}): served outputs bit-identical to the "
           "direct call.")
+
+    if args.trace:
+        print(f"\ntrace: {stats['submitted']} request spans in "
+              f"{args.trace}. Inspect with\n"
+              f"  PYTHONPATH=src python -m repro.obs.snapshot {args.trace} "
+              f"--chrome {args.trace}.chrome.json\n"
+              "then open the .chrome.json at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

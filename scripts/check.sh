@@ -8,6 +8,7 @@
 #   scripts/check.sh --smoke-fault  fault-tolerance guard only (DESIGN.md §12)
 #   scripts/check.sh --smoke-slo    service-level guard only (DESIGN.md §13)
 #   scripts/check.sh --smoke-infer  inference datapath guard only (DESIGN.md §14)
+#   scripts/check.sh --smoke-obs    observability guard only (DESIGN.md §15)
 #
 # The perf smoke runs benchmarks/kernel_bench.py --smoke on a reduced size
 # and fails if (a) the KCM constant-coefficient path is slower than the
@@ -59,6 +60,14 @@
 # mitchell_ecc2 top-1 agreement vs the oracle must clear the floor, and
 # inference served through repro.serve at several flush sizes must return
 # bytes equal to the direct forward call.
+#
+# The observability smoke (--smoke-obs, serve_bench.py --smoke-obs) is the
+# DESIGN.md §15 guard: tracing + profiling must cost under 5% of coalesced
+# throughput on realistic frames, a 50-request mixed-priority load must
+# leave a complete well-formed trace (exactly one fulfil/shed/fail
+# terminal per submitted request, stage timestamps monotone), the
+# stats()/metrics snapshot schema keys must stay stable, and a served
+# output must remain bit-identical with tracing on.
 #
 # The doc lint asserts that every `DESIGN.md §N` reference in src/ and
 # benchmarks/ resolves to a real `## §N` section of DESIGN.md, so the code's
@@ -118,6 +127,11 @@ if [[ "${1:-}" == "--smoke-infer" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--smoke-obs" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke-obs
+  exit 0
+fi
+
 lint
 if [[ "${1:-}" == "--lint" ]]; then
   exit 0
@@ -144,3 +158,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smo
 
 echo "== inference smoke (infer_bench --smoke) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.infer_bench --smoke
+
+echo "== observability smoke (serve_bench --smoke-obs) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke-obs

@@ -56,6 +56,8 @@ ROWS = [
      "overloaded serving, mixed priorities, static flush policy (µs = mean post-admission latency)"),
     ("serve_slo_adaptive",
      "overloaded serving, mixed priorities, **SLO-adaptive batching + priority shedding** (§13)"),
+    ("serve_obs_on",
+     "online serving, coalesced, **tracing + roofline profiling on** (§15; realistic-frame mix)"),
     ("infer_cnn_int8",
      "CNN inference (8×8, n=32), **exact-quantized int8 oracle** (§14; µs = batched forward)"),
     ("infer_cnn_refmlm",
@@ -76,6 +78,8 @@ SPEEDUPS = [
      "coalesced vs sequential serving throughput (§10)"),
     ("serve_slo_high_p99_gain",
      "static vs adaptive high-priority p99 under overload (§13)"),
+    ("serve_obs_overhead",
+     "observability off vs on throughput (§15; the <1.05× budget)"),
 ]
 
 

@@ -46,6 +46,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distribute.mesh import BATCH_AXIS, ROWS_AXIS, filter_mesh, shard_dims
 from repro.filters.bank import FilterSpec, get_filter
+from repro.obs import trace as obs_trace
 from repro.runtime.fault import SITE_SHARD
 from repro.runtime.fault import probe as fault_probe
 
@@ -141,9 +142,15 @@ def sharded_call(pass_fn: Callable, pass_key: tuple, imgs: Array, ph: int, *,
     # `dev<id>` models that one device dying, which is what lets the
     # elastic pool's per-device probe find the survivors
     # (repro.runtime.elastic.surviving_devices).
+    traced = obs_trace.tracing()
     for shard, dev in enumerate(mesh.devices.flat):
         fault_probe(SITE_SHARD, key=f"{pass_key[0]}/{halo}/dev{dev.id}",
                     index=shard)
+        if traced:
+            # §15: one event per participating shard, on the same stream
+            # as the request spans of the batch being dispatched
+            obs_trace.emit("shard", filt=pass_key[0], halo=halo,
+                           shard=shard, dev=dev.id, n=n)
     x = jnp.asarray(imgs)
     if n2 != n or h2 != h:
         x = jnp.pad(x, ((0, n2 - n), (0, h2 - h), (0, 0)))

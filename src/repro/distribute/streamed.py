@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.filters.bank import FilterSpec, get_filter
+from repro.obs import trace as obs_trace
 from repro.runtime.fault import SITE_TILE
 from repro.runtime.fault import probe as fault_probe
 
@@ -234,9 +235,14 @@ def stream_filter(src, filt: FilterSpec | str, *,
             if idx not in done]
     try:
         for group in _batches(work, max(int(tile_batch), 1)):
+            traced = obs_trace.tracing()
             for idx, i, t in group:
                 fault_probe(SITE_TILE, key=f"img{i}:r{t.r0}c{t.c0}",
                             index=idx)
+                if traced:
+                    # §15: one event per planned tile on the active trace
+                    obs_trace.emit("tile", img=i, tile=idx, r0=t.r0,
+                                   c0=t.c0)
             batch = np.zeros((len(group), TH, TW), np.int32)
             for b, (idx, i, t) in enumerate(group):
                 batch[b, t.pad_top:t.pad_top + (t.sr1 - t.sr0),

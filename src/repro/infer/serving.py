@@ -35,6 +35,7 @@ import numpy as np
 from repro.infer.calibrate import CalibratedModel
 from repro.infer.graph import Conv, Dense
 from repro.infer.runner import INFER_METHODS, forward
+from repro.obs import trace as obs_trace
 from repro.serve.request import FilterRequest
 from repro.serve.workload import Workload
 
@@ -113,6 +114,11 @@ class InferWorkload(Workload):
                 fn = jax.jit(lambda x: forward(cal, x, method))
                 self._fns[memo] = fn
                 self.compiles += 1
+                if obs_trace.tracing():
+                    # §15: infer plan-memo misses (a new jit entry) are
+                    # the latency cliffs worth seeing on the trace
+                    obs_trace.emit("infer", model=target, method=method,
+                                   nbits=nbits, compiles=self.compiles)
         return fn
 
     def execute(self, executor, requests: tuple[FilterRequest, ...],

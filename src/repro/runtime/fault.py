@@ -52,6 +52,7 @@ from typing import Any, Callable, Iterable, Iterator, Sequence
 import jax
 
 from repro.checkpoint import CheckpointManager
+from repro.obs.trace import emit as trace_emit
 
 log = logging.getLogger("repro.fault")
 
@@ -186,6 +187,11 @@ class FaultInjector:
                     r.fired += 1
                     self.events.append((site, call_no, key, index,
                                         r.describe()))
+                    # tag the firing into any active trace (DESIGN.md
+                    # §15) so a chaos run's injected faults line up
+                    # with the request spans they poisoned
+                    trace_emit("fault", site=site, call=call_no, key=key,
+                               index=index, rule=r.describe())
                     raise InjectedFault(
                         f"injected fault at {site} call {call_no} "
                         f"(key={key!r}, index={index}): {r.describe()}")

@@ -27,7 +27,10 @@ Layers:
                    degraded-fallback machinery;
   pool.py       -- `ExecutorPool`, rendezvous-routed executors over
                    device subsets with probe-and-rebuild failover;
-  server.py     -- `ImageFilterServer` (worker thread, `submit`, stats);
+  server.py     -- `ImageFilterServer` (worker thread, `submit`, stats;
+                   the §15 `trace=`/`profile=` observability knobs and
+                   the one-lock consistent `stats()` snapshot over the
+                   shared `repro.obs.MetricsRegistry`);
   warmup.py     -- `python -m repro.serve.warmup` deploy-time pre-compiler.
 
     from repro.serve import ImageFilterServer, ServerConfig

@@ -23,12 +23,25 @@ gate.
 lock) whenever an acquire of `weight` slots is about to block, letting
 the server wake its worker to shed low-priority queued work instead of
 keeping a high-priority submitter waiting behind it.
+
+Telemetry (DESIGN.md §15): the gate's counters live in a
+`repro.obs.MetricsRegistry` -- the server passes its own so
+`server.stats()` can read admission state in the same consistent
+snapshot as the request counters; a standalone gate mints a private
+registry. The gate's own `_cond`-guarded integers stay the admission
+*logic*'s source of truth (the registry is telemetry, never control
+flow), mirrored into gauges on every acquire/release. `snapshot()` and
+`tenant_stats()` read the registry only -- no `_cond` -- so the server
+may call them while holding the registry lock without inverting the
+`component-lock -> registry-lock` order.
 """
 from __future__ import annotations
 
 import threading
 import time
 from typing import Callable
+
+from repro.obs.metrics import MetricsRegistry
 
 
 class ServerOverloaded(RuntimeError):
@@ -59,7 +72,8 @@ class AdmissionGate:
                  clock=time.monotonic, *,
                  tenant_quota: int | None = None,
                  tenant_quotas: dict[str, int] | None = None,
-                 on_wait: Callable[[int], None] | None = None) -> None:
+                 on_wait: Callable[[int], None] | None = None,
+                 metrics: MetricsRegistry | None = None) -> None:
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = int(max_pending)
@@ -71,8 +85,15 @@ class AdmissionGate:
         self._cond = threading.Condition()
         self._inflight = 0                       # weighted slots
         self._tenants: dict[str, int] = {}       # tenant -> weighted slots
-        self._rejected = 0
-        self._quota_rejected: dict[str, int] = {}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_rejected = self.metrics.counter(
+            "serve_admission_rejected_total")
+        self._c_tenant_rejected = self.metrics.counter(
+            "serve_admission_tenant_rejected_total")
+        self._g_inflight = self.metrics.gauge(
+            "serve_admission_inflight_weight")
+        self._g_tenant = self.metrics.gauge(
+            "serve_admission_tenant_inflight")
 
     def quota_for(self, tenant: str) -> int:
         """The tenant's weighted in-flight cap (explicit > uniform > the
@@ -87,8 +108,7 @@ class AdmissionGate:
 
     @property
     def rejected(self) -> int:
-        with self._cond:
-            return self._rejected
+        return self._c_rejected.value()
 
     def pressure(self) -> float:
         """Weighted in-flight load as a fraction of `max_pending` (the
@@ -97,13 +117,25 @@ class AdmissionGate:
             return self._inflight / self.max_pending
 
     def tenant_stats(self) -> dict[str, dict[str, int]]:
-        """Per-tenant {inflight, quota, rejected} snapshot (operator API)."""
-        with self._cond:
-            tenants = set(self._tenants) | set(self._quota_rejected)
-            return {t: {"inflight": self._tenants.get(t, 0),
-                        "quota": self.quota_for(t),
-                        "rejected": self._quota_rejected.get(t, 0)}
-                    for t in sorted(tenants)}
+        """Per-tenant {inflight, quota, rejected} snapshot (operator API).
+        Registry-only reads (§15): safe under the server's `hold()`."""
+        inflight = self._g_tenant.group_by("tenant")
+        rejected = self._c_tenant_rejected.group_by("tenant")
+        tenants = ({t for t, v in inflight.items() if v}
+                   | {t for t, v in rejected.items() if v})
+        return {t: {"inflight": inflight.get(t, 0),
+                    "quota": self.quota_for(t),
+                    "rejected": rejected.get(t, 0)}
+                for t in sorted(tenants)}
+
+    def snapshot(self) -> dict:
+        """Registry-only gate surface for the server's one-lock stats()
+        snapshot (DESIGN.md §15): never touches the gate's `_cond`."""
+        pending = self._g_inflight.value()
+        return {"pending": pending,
+                "pressure": pending / self.max_pending,
+                "rejected": self._c_rejected.value(),
+                "tenants": self.tenant_stats()}
 
     def _fits(self, weight: int, tenant: str, quota: int) -> bool:
         return (self._inflight + weight <= self.max_pending
@@ -119,9 +151,7 @@ class AdmissionGate:
         quota = self.quota_for(tenant)
         if weight > quota:
             # oversized request: would never fit -- fail loud, don't hang
-            with self._cond:
-                self._quota_rejected[tenant] = (
-                    self._quota_rejected.get(tenant, 0) + 1)
+            self._c_tenant_rejected.inc(tenant=tenant)
             raise TenantOverQuota(
                 f"request weight {weight} exceeds tenant {tenant!r} quota "
                 f"{quota} outright")
@@ -140,10 +170,9 @@ class AdmissionGate:
                 if remaining <= 0 or not self._cond.wait(remaining):
                     tenant_full = (self._tenants.get(tenant, 0) + weight
                                    > quota)
-                    self._rejected += 1
+                    self._c_rejected.inc()
                     if tenant_full:
-                        self._quota_rejected[tenant] = (
-                            self._quota_rejected.get(tenant, 0) + 1)
+                        self._c_tenant_rejected.inc(tenant=tenant)
                         raise TenantOverQuota(
                             f"tenant {tenant!r} at quota "
                             f"{self._tenants.get(tenant, 0)}/{quota} "
@@ -153,6 +182,9 @@ class AdmissionGate:
                         f"max_pending={self.max_pending} for {timeout:.3f}s")
             self._inflight += weight
             self._tenants[tenant] = self._tenants.get(tenant, 0) + weight
+            with self.metrics.hold():
+                self._g_inflight.add(weight)
+                self._g_tenant.add(weight, tenant=tenant)
 
     def release(self, weight: int = 1, tenant: str = "default") -> None:
         """Free `weight` slots of `tenant` (its request was fulfilled)."""
@@ -166,6 +198,9 @@ class AdmissionGate:
                 self._tenants[tenant] = held
             else:
                 self._tenants.pop(tenant, None)
+            with self.metrics.hold():
+                self._g_inflight.add(-weight)
+                self._g_tenant.add(-weight, tenant=tenant)
             self._cond.notify_all()
 
 

@@ -43,6 +43,12 @@ until it is popped into exactly one `MicroBatch` *or* swept into the shed
 list exactly once (asserted under concurrent mixed-shape load in
 tests/test_serve.py and under chaos schedules in
 tests/test_fault_tolerance.py).
+
+Tracing (DESIGN.md §15): with a `trace=` recorder the batcher emits one
+'enqueue' event per `add()` (stamped with the request's own submission
+instant) and one 'flush' event per popped request (the flush reason and
+batch size attached) -- the queue-wait segment of the per-request span.
+The default `NOOP` recorder keeps tracing-off at one attribute test.
 """
 from __future__ import annotations
 
@@ -50,6 +56,7 @@ import time
 from collections import OrderedDict, deque
 from typing import Callable, NamedTuple
 
+from repro.obs.trace import NOOP
 from repro.serve.request import FilterRequest, PRIORITIES
 
 FLUSH_REASONS = ("size", "deadline", "drain")
@@ -82,7 +89,7 @@ class ShapeBucketedBatcher:
 
     def __init__(self, max_batch: int, max_delay_s: float,
                  clock: Callable[[], float] = time.monotonic, *,
-                 policy: FlushPolicy | None = None) -> None:
+                 policy: FlushPolicy | None = None, trace=NOOP) -> None:
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_s < 0:
@@ -91,6 +98,7 @@ class ShapeBucketedBatcher:
         self.max_delay_s = float(max_delay_s)
         self.clock = clock
         self.policy = policy
+        self.trace = trace
         # insertion-ordered so equal deadlines flush in arrival order
         self._buckets: OrderedDict[str, deque[FilterRequest]] = OrderedDict()
         self._shed: list[ShedRequest] = []
@@ -157,13 +165,24 @@ class ShapeBucketedBatcher:
         """Queue one admitted request; returns its bucket key."""
         key = req.key
         self._buckets.setdefault(key, deque()).append(req)
+        if self.trace.enabled:
+            self.trace.event("enqueue", ts=req.submitted, seq=req.seq,
+                             bucket=key, priority=req.priority,
+                             tenant=req.tenant, workload=req.workload,
+                             weight=req.weight)
         return key
 
-    def _pop(self, key: str, count: int, reason: str) -> MicroBatch:
+    def _pop(self, key: str, count: int, reason: str,
+             now: float | None = None) -> MicroBatch:
         q = self._buckets[key]
         batch = tuple(q.popleft() for _ in range(min(count, len(q))))
         if not q:
             del self._buckets[key]
+        if self.trace.enabled:
+            ts = self.clock() if now is None else now
+            for r in batch:
+                self.trace.event("flush", ts=ts, seq=r.seq, bucket=key,
+                                 reason=reason, n=len(batch))
         return MicroBatch(key, batch, reason)
 
     def _ordered_keys(self) -> list[str]:
@@ -184,9 +203,9 @@ class ShapeBucketedBatcher:
                 q = self._buckets[key]
                 size, delay = self._params(key, q)
                 if len(q) >= size:
-                    out.append(self._pop(key, size, "size"))
+                    out.append(self._pop(key, size, "size", now))
                 elif now - q[0].submitted >= delay:
-                    out.append(self._pop(key, size, "deadline"))
+                    out.append(self._pop(key, size, "deadline", now))
                 else:
                     break
         return out
@@ -207,11 +226,12 @@ class ShapeBucketedBatcher:
         high-priority buckets first. Expired requests still shed rather
         than flush: their deadline passed, so serving them on shutdown
         would violate it anyway."""
-        self._sweep_expired(self.clock())
+        now = self.clock()
+        self._sweep_expired(now)
         out = []
         for key in self._ordered_keys():
             while key in self._buckets:
-                out.append(self._pop(key, self.max_batch, "drain"))
+                out.append(self._pop(key, self.max_batch, "drain", now))
         return out
 
 

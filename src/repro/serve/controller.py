@@ -40,6 +40,7 @@ from __future__ import annotations
 import threading
 from typing import Iterable
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.request import FilterRequest
 from repro.serve.workload import Workload, resolve_workloads
 
@@ -82,7 +83,8 @@ class AdaptiveBatchController:
                  safety: float = DEFAULT_SAFETY,
                  alpha: float = DEFAULT_ALPHA,
                  backend: str | None = None,
-                 workloads: dict[str, Workload] | None = None) -> None:
+                 workloads: dict[str, Workload] | None = None,
+                 metrics: MetricsRegistry | None = None) -> None:
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self._workloads = resolve_workloads(workloads)
@@ -98,8 +100,11 @@ class AdaptiveBatchController:
         self._calibration = 1.0          # EWMA of observed / model bound
         self._calibrated = False
         self._chosen: dict[str, int] = {}        # bucket -> last flush size
-        self.decisions = 0               # params() calls that saw an SLO
-        self.static_decisions = 0        # params() calls without one
+        # §15: decision counters live in the metrics registry (the server
+        # shares its own; a standalone controller mints a private one)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_decisions = self.metrics.counter(
+            "serve_controller_decisions_total")
 
     # ------------------------------------------------------------ cost model
     def _model_bound(self, key: str, req: FilterRequest, n: int) -> float:
@@ -166,7 +171,7 @@ class AdaptiveBatchController:
         slos = [r.slo for r in queue if r.slo is not None]
         if not slos or not queue:
             with self._lock:
-                self.static_decisions += 1
+                self._c_decisions.inc(kind="static")
                 self._chosen[key] = self.max_batch
             return self.max_batch, self.max_delay_s
         req = queue[0]
@@ -182,9 +187,19 @@ class AdaptiveBatchController:
         tail = self.safety * self.predict_s(key, req, size)
         delay = max(0.0, budget - tail)
         with self._lock:
-            self.decisions += 1
+            self._c_decisions.inc(kind="slo")
             self._chosen[key] = size
         return size, delay
+
+    @property
+    def decisions(self) -> int:
+        """params() calls that saw an SLO (registry-backed, §15)."""
+        return self._c_decisions.value(kind="slo")
+
+    @property
+    def static_decisions(self) -> int:
+        """params() calls that fell back to the static pair (§15)."""
+        return self._c_decisions.value(kind="static")
 
     def stats(self) -> dict:
         """Operator snapshot: last chosen flush size per bucket, ledger

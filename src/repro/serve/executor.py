@@ -67,16 +67,30 @@ an explicit device-id tuple (the elastic pool's device-subset meshes,
 `repro.distribute.mesh.filter_mesh`); and `on_dispatch(key, mode, ok)`
 reports every dispatch outcome to the owning `ExecutorPool`'s health
 tracker.
+
+Telemetry (DESIGN.md §15): the ledger counters live in a
+`repro.obs.MetricsRegistry` (labelled `member=` so pool members share
+one registry without colliding); the historical attribute API
+(`ex.hits`, `ex.retries`, ...) is preserved as properties reading the
+registry. With a `trace=` recorder, every dispatch emits per-request
+'dispatch' events (serve key, exec mode actually used, traced batch
+size, resolved §11 plan tag) and every fulfilment/isolated failure its
+terminal event. With a `profiler=` (`repro.obs.DispatchProfiler`), every
+workload dispatch is wall-timed against its roofline price -- the §15
+predicted-vs-observed drift histogram. All three default off/no-op.
 """
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.filters.pipeline import resolve_filter_plan
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NOOP
 from repro.runtime.fault import SITE_EXECUTE
 from repro.runtime.fault import probe as fault_probe
 from repro.serve.batcher import MicroBatch
@@ -102,7 +116,9 @@ class BatchExecutor:
                  tile_batch: int = 8, degrade_after: int = 2,
                  plan_memo_max: int = 256, name: str = "",
                  on_dispatch: Callable[[str, str, bool], None] | None = None,
-                 workloads: dict[str, Workload] | None = None) -> None:
+                 workloads: dict[str, Workload] | None = None,
+                 metrics: MetricsRegistry | None = None,
+                 trace=NOOP, profiler=None) -> None:
         self.interpret = interpret
         self.workloads = resolve_workloads(workloads)
         self.pad_pow2 = pad_pow2
@@ -117,18 +133,57 @@ class BatchExecutor:
         self._lock = threading.Lock()
         self._plans: OrderedDict[tuple, dict] = OrderedDict()
         self._plans_gen = cache_generation()
-        self.plan_hits = 0
-        self.plan_misses = 0
-        self.plan_evicts = 0
         self.warmed: set[str] = set()
-        self.hits = 0
-        self.misses = 0
-        # ------------------------------ §12 fault-tolerance bookkeeping
-        self.retries = 0                  # bisection re-dispatches
-        self.isolated = 0                 # requests that kept an exception
+        # ------------------------------ §15 telemetry (registry-backed)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._trace = trace
+        self.profiler = profiler
+        m = self.metrics
+        self._c_hits = m.counter("serve_compile_hits_total")
+        self._c_misses = m.counter("serve_compile_misses_total")
+        self._c_plan_hits = m.counter("serve_plan_hits_total")
+        self._c_plan_misses = m.counter("serve_plan_misses_total")
+        self._c_plan_evicts = m.counter("serve_plan_evicts_total")
+        self._c_retries = m.counter("serve_retries_total")
+        self._c_isolated = m.counter("serve_isolated_total")
+        self._c_degraded = m.counter("serve_degraded_total")
+        # ------------------------------ §12 fault-tolerance state
         self.failures: dict[str, int] = {}   # bucket -> consecutive failures
-        self.degraded: dict[str, int] = {}   # bucket -> fallback dispatches
         self._fallback: set[str] = set()     # buckets pinned to local exec
+
+    # ------------------------------------------------ registry-backed ledger
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value(member=self.name)
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value(member=self.name)
+
+    @property
+    def plan_hits(self) -> int:
+        return self._c_plan_hits.value(member=self.name)
+
+    @property
+    def plan_misses(self) -> int:
+        return self._c_plan_misses.value(member=self.name)
+
+    @property
+    def plan_evicts(self) -> int:
+        return self._c_plan_evicts.value(member=self.name)
+
+    @property
+    def retries(self) -> int:
+        return self._c_retries.value(member=self.name)
+
+    @property
+    def isolated(self) -> int:
+        return self._c_isolated.value(member=self.name)
+
+    @property
+    def degraded(self) -> dict[str, int]:
+        """bucket -> §12 local-fallback dispatch count (this member's)."""
+        return self._c_degraded.group_by("bucket", member=self.name)
 
     # -------------------------------------------------- per-bucket plan memo
     def _plan(self, filt: str, method: str, mult_impl: str, n: int, h: int,
@@ -152,10 +207,10 @@ class BatchExecutor:
                 self._plans_gen = gen
             plan = self._plans.get(memo_key)
             if plan is not None:
-                self.plan_hits += 1
+                self._c_plan_hits.inc(member=self.name)
                 self._plans.move_to_end(memo_key)
                 return plan
-            self.plan_misses += 1
+            self._c_plan_misses.inc(member=self.name)
         cfg = resolve_filter_plan(filt, n, h, w, method=method,
                                   mult_impl=mult_impl)
         plan = {"separable": cfg.dataflow != "direct",
@@ -169,7 +224,7 @@ class BatchExecutor:
             self._plans.move_to_end(memo_key)
             while len(self._plans) > self.plan_memo_max:
                 self._plans.popitem(last=False)
-                self.plan_evicts += 1
+                self._c_plan_evicts.inc(member=self.name)
         return plan
 
     def _exec_kw(self, exec_mode: str, filt: str, method: str,
@@ -189,6 +244,21 @@ class BatchExecutor:
                     "tile_batch": self.tile_batch, "mult_impl": mult_impl}
         raise ValueError(f"unknown exec mode {exec_mode!r}")
 
+    def _plan_tag(self, mode: str, r0: FilterRequest, traced_n: int) -> str:
+        """Compact spelling of the dispatch's resolved execution plan for
+        the §15 trace/drift labels: the §11 PlanConfig for a local filter
+        dispatch, the exec mode (+ workload) otherwise. Only computed when
+        tracing or profiling is on; the memo makes it a plan-memo hit."""
+        if mode == "local" and r0.workload == "filter":
+            h, w = r0.img.shape
+            p = self._plan(r0.filt, r0.method, r0.mult_impl, traced_n, h, w)
+            df = ("fused" if p["fused"]
+                  else "two_pass" if p["separable"] else "direct")
+            tag = (f"{df}/{p['mult_impl']}"
+                   f"/br{p['block_rows']}xbc{p['block_cols']}")
+            return tag + ("/fold" if p["batch_fold"] else "")
+        return f"{mode}/{r0.workload}"
+
     # ------------------------------------------------------------- execution
     def execute(self, key: str, requests: tuple[FilterRequest, ...], *,
                 exec_override: str | None = None) -> list[np.ndarray]:
@@ -199,11 +269,13 @@ class BatchExecutor:
         traced_n = next_pow2(n) if self.pad_pow2 else n
         skey = serve_key(key, traced_n)
         with self._lock:
-            if skey in self.warmed:
-                self.hits += 1
-            else:
-                self.misses += 1
+            warm = skey in self.warmed
+            if not warm:
                 self.warmed.add(skey)
+        if warm:
+            self._c_hits.inc(member=self.name)
+        else:
+            self._c_misses.inc(member=self.name)
         mode = r0.exec if exec_override is None else exec_override
         tag = f"|member={self.name}" if self.name else ""
         fault_probe(SITE_EXECUTE, key=f"{skey}|exec={mode}{tag}",
@@ -212,7 +284,22 @@ class BatchExecutor:
         if wl is None:
             raise KeyError(f"no workload {r0.workload!r} registered "
                            f"(have: {tuple(self.workloads)})")
-        return wl.execute(self, requests, traced_n, mode)
+        prof = self.profiler
+        plan = (self._plan_tag(mode, r0, traced_n)
+                if prof is not None or self._trace.enabled else None)
+        if self._trace.enabled:
+            for r in requests:
+                self._trace.event("dispatch", seq=r.seq, bucket=key,
+                                  skey=skey, exec=mode, n=n,
+                                  traced_n=traced_n, plan=plan,
+                                  member=self.name, workload=r0.workload)
+        if prof is None:
+            return wl.execute(self, requests, traced_n, mode)
+        predicted = prof.predicted(wl, key, r0, traced_n)
+        t0 = time.perf_counter()
+        outs = wl.execute(self, requests, traced_n, mode)
+        prof.record(key, plan, predicted, time.perf_counter() - t0)
+        return outs
 
     def _report(self, key: str, mode: str, ok: bool) -> None:
         """Tell the owning pool (if any) how one dispatch went -- the §13
@@ -234,8 +321,7 @@ class BatchExecutor:
         if scale_out and key in self._fallback:
             outs = self.execute(key, requests, exec_override="local")
             self._report(key, "local", True)
-            with self._lock:
-                self.degraded[key] = self.degraded.get(key, 0) + 1
+            self._c_degraded.inc(member=self.name, bucket=key)
             return outs
         try:
             outs = self.execute(key, requests)
@@ -250,8 +336,7 @@ class BatchExecutor:
                 if key in self._fallback:
                     outs = self.execute(key, requests, exec_override="local")
                     self._report(key, "local", True)
-                    with self._lock:
-                        self.degraded[key] = self.degraded.get(key, 0) + 1
+                    self._c_degraded.inc(member=self.name, bucket=key)
                     return outs
             raise
         self._report(key, mode, True)
@@ -267,16 +352,18 @@ class BatchExecutor:
         fail *alone* keep the exception (§12). Byte-safe: outputs are
         batch-invariant (§10), so a re-served neighbor gets the same bits."""
         if retry:
-            with self._lock:
-                self.retries += 1
+            self._c_retries.inc(member=self.name)
         try:
             outs = self._dispatch(key, requests)
         except BaseException as err:                       # noqa: BLE001
             if len(requests) == 1:
-                with self._lock:
-                    self.isolated += 1
+                self._c_isolated.inc(member=self.name)
                 if not requests[0].future.done():
                     requests[0].future.set_exception(err)
+                    if self._trace.enabled:
+                        self._trace.event("fail", seq=requests[0].seq,
+                                          bucket=key, cause="isolated",
+                                          error=repr(err))
                 return
             mid = len(requests) // 2
             self._fulfil(key, requests[:mid], retry=True)
@@ -285,6 +372,8 @@ class BatchExecutor:
         for req, out in zip(requests, outs):
             if not req.future.done():
                 req.future.set_result(out)
+                if self._trace.enabled:
+                    self._trace.event("fulfil", seq=req.seq, bucket=key)
 
     def run(self, batch: MicroBatch) -> None:
         """Execute and fulfil -- every future resolves exactly once, to its
@@ -297,6 +386,10 @@ class BatchExecutor:
             for req in batch.requests:
                 if not req.future.done():
                     req.future.set_exception(err)
+                    if self._trace.enabled:
+                        self._trace.event("fail", seq=req.seq,
+                                          bucket=batch.key,
+                                          cause="executor", error=repr(err))
 
     @property
     def degraded_mode(self) -> bool:
@@ -306,21 +399,24 @@ class BatchExecutor:
     def fault_stats(self) -> dict:
         """Snapshot of the §12 counters (the server's stats() source)."""
         with self._lock:
-            return {"retries": self.retries, "isolated": self.isolated,
-                    "degraded": dict(self.degraded),
-                    "dispatch_failures": dict(self.failures)}
+            failures = dict(self.failures)
+        return {"retries": self.retries, "isolated": self.isolated,
+                "degraded": self.degraded,
+                "dispatch_failures": failures}
 
     def stats(self) -> dict:
         """Full executor snapshot: the warm compile ledger, the §13
         LRU plan-memo counters, and the §12 fault counters."""
         with self._lock:
-            snap = {"warmed": len(self.warmed), "hits": self.hits,
-                    "misses": self.misses,
-                    "plan_memo": {"size": len(self._plans),
-                                  "max": self.plan_memo_max,
-                                  "hits": self.plan_hits,
-                                  "misses": self.plan_misses,
-                                  "evicts": self.plan_evicts}}
+            warmed = len(self.warmed)
+            plan_size = len(self._plans)
+        snap = {"warmed": warmed, "hits": self.hits,
+                "misses": self.misses,
+                "plan_memo": {"size": plan_size,
+                              "max": self.plan_memo_max,
+                              "hits": self.plan_hits,
+                              "misses": self.plan_misses,
+                              "evicts": self.plan_evicts}}
         snap.update(self.fault_stats())
         return snap
 

@@ -39,6 +39,15 @@ in tests/test_serve_slo.py and `scripts/check.sh --smoke-slo`).
 The pool quacks like a `BatchExecutor` where the server cares (`run`,
 `warm`, `stats`, `fault_stats`, `degraded_mode`, the warm-cache ledger),
 so `ImageFilterServer` holds either behind one attribute.
+
+Telemetry (DESIGN.md §15): the pool and its members share ONE
+`repro.obs.MetricsRegistry` (the server's, when pooled serving is
+configured) -- member ledgers are disambiguated by their `member=` label,
+and the pool's health counters (`drains`, `rebuilds`, `drain_refused`,
+per-member dispatch/route tallies) are registry-backed with the
+historical attribute API preserved as properties. A `trace=` recorder in
+`executor_kw` flows to every member, so pooled dispatches land in the
+same per-request span stream as solo ones.
 """
 from __future__ import annotations
 
@@ -48,6 +57,7 @@ from typing import Sequence
 
 import jax
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.batcher import MicroBatch
 from repro.serve.executor import SCALE_OUT_MODES, BatchExecutor
 from repro.serve.request import bucket_key
@@ -81,20 +91,44 @@ def _resolve_ids(spec, index: int) -> tuple[int, ...]:
 
 
 class PoolMember:
-    """One executor + its device subset + its health counters."""
+    """One executor + its device subset + its health counters.
+
+    Health *logic* state (`state`, `consecutive`, `draining`) stays plain
+    attributes under the pool's lock; the monotonic tallies live in the
+    shared metrics registry (§15), labelled by member name, and read back
+    through properties so the operator surface is unchanged."""
 
     def __init__(self, name: str, device_ids: tuple[int, ...],
-                 executor: BatchExecutor) -> None:
+                 executor: BatchExecutor,
+                 metrics: MetricsRegistry) -> None:
         self.name = name
         self.device_ids = device_ids
         self.executor = executor
         self.state = "active"
         self.draining = False           # re-entrancy guard for the drain
         self.consecutive = 0            # consecutive scale-out failures
-        self.dispatches = 0
-        self.failed = 0
-        self.routes = 0
-        self.rebuilds = 0
+        self._metrics = metrics
+        self._c_dispatches = metrics.counter("serve_pool_dispatches_total")
+        self._c_failed = metrics.counter("serve_pool_dispatch_failed_total")
+        self._c_routes = metrics.counter("serve_pool_routes_total")
+        self._c_rebuilds = metrics.counter(
+            "serve_pool_member_rebuilds_total")
+
+    @property
+    def dispatches(self) -> int:
+        return self._c_dispatches.value(member=self.name)
+
+    @property
+    def failed(self) -> int:
+        return self._c_failed.value(member=self.name)
+
+    @property
+    def routes(self) -> int:
+        return self._c_routes.value(member=self.name)
+
+    @property
+    def rebuilds(self) -> int:
+        return self._c_rebuilds.value(member=self.name)
 
 
 class ExecutorPool:
@@ -109,16 +143,21 @@ class ExecutorPool:
         self._executor_kw.pop("devices", None)
         self._executor_kw.pop("name", None)
         self._executor_kw.pop("on_dispatch", None)
+        # one shared registry (§15): member ledgers key by member= label
+        metrics = self._executor_kw.get("metrics")
+        if metrics is None:
+            metrics = MetricsRegistry()
+        self.metrics = self._executor_kw["metrics"] = metrics
+        self._c_drains = metrics.counter("serve_pool_drains_total")
+        self._c_rebuilds = metrics.counter("serve_pool_rebuilds_total")
+        self._c_refused = metrics.counter("serve_pool_drain_refused_total")
         self._lock = threading.Lock()
-        self.drains = 0                 # members retired (dead)
-        self.rebuilds = 0               # members rebuilt on fewer devices
-        self.drain_refused = 0          # last-member drains refused
         self._members: dict[str, PoolMember] = {}
         for i, spec in enumerate(members):
             name = f"m{i}"
             ids = _resolve_ids(spec, i)
             self._members[name] = PoolMember(
-                name, ids, self._make_executor(name, ids))
+                name, ids, self._make_executor(name, ids), metrics)
 
     def _make_executor(self, name: str, ids: tuple[int, ...]) -> BatchExecutor:
         return BatchExecutor(devices=ids, name=name,
@@ -147,7 +186,7 @@ class ExecutorPool:
             if not actives:
                 raise RuntimeError("executor pool has no active members")
             best = max(actives, key=lambda m: rendezvous_score(m.name, key))
-            best.routes += 1
+            best._c_routes.inc(member=best.name)
             return best
 
     def run(self, batch: MicroBatch) -> None:
@@ -177,9 +216,9 @@ class ExecutorPool:
             m = self._members.get(name)
             if m is None:
                 return
-            m.dispatches += 1
+            m._c_dispatches.inc(member=name)
             if not ok:
-                m.failed += 1
+                m._c_failed.inc(member=name)
             if m.state == "active" and self._native_mode(key) in SCALE_OUT_MODES:
                 if ok and mode in SCALE_OUT_MODES:
                     m.consecutive = 0
@@ -204,7 +243,7 @@ class ExecutorPool:
             if len(actives) <= 1:
                 # never retire the last member: its own per-bucket local
                 # fallback (§12) is the final line of defence
-                self.drain_refused += 1
+                self._c_refused.inc()
                 m.consecutive = 0
                 m.draining = False
                 return
@@ -215,14 +254,14 @@ class ExecutorPool:
                 m.device_ids = survivors
                 m.executor = self._make_executor(name, survivors)
                 m.consecutive = 0
-                m.rebuilds += 1
-                self.rebuilds += 1
+                m._c_rebuilds.inc(member=name)
+                self._c_rebuilds.inc()
             else:
                 # nothing survived, or everything did (the failures are
                 # not a shrinkable device loss): retire the member and
                 # let its buckets re-rendezvous onto the survivors
                 m.state = "dead"
-                self.drains += 1
+                self._c_drains.inc()
             m.draining = False
 
     # --------------------------------------- BatchExecutor-compatible surface
@@ -255,6 +294,21 @@ class ExecutorPool:
     @property
     def misses(self) -> int:
         return sum(m.executor.misses for m in self.members())
+
+    @property
+    def drains(self) -> int:
+        """Members retired (dead) -- registry-backed (§15)."""
+        return self._c_drains.value()
+
+    @property
+    def rebuilds(self) -> int:
+        """Members rebuilt on fewer devices -- registry-backed (§15)."""
+        return self._c_rebuilds.value()
+
+    @property
+    def drain_refused(self) -> int:
+        """Last-member drains refused -- registry-backed (§15)."""
+        return self._c_refused.value()
 
     @property
     def degraded_mode(self) -> bool:

@@ -1,5 +1,6 @@
 """`ImageFilterServer` -- the online serving loop (DESIGN.md §10) with the
-§12 fault-tolerance surface and the §13 service-level machinery.
+§12 fault-tolerance surface, the §13 service-level machinery, and the
+§15 observability layer.
 
 One worker thread owns all device dispatch; client threads only validate,
 stack and wait. `submit()` admits a request through the backpressure gate
@@ -48,11 +49,36 @@ faults bisect so only genuinely poisoned requests fail, and a catch-all
 around every batch keeps the worker alive and flips the server to the
 explicit degraded state rather than hanging futures.
 
+Observability (DESIGN.md §15):
+
+  * **one metrics registry** -- every server/admission/batcher/executor/
+    controller/pool counter lives in `self.metrics`
+    (`repro.obs.MetricsRegistry`), and `stats()` reads the request
+    conservation counters under ONE registry lock, so the accounting
+    identity `served + failed + shed <= submitted` holds in every
+    snapshot (previously a flush between reads could break it).
+  * **tracing** (`trace=`) -- `None` (off, a no-op recorder), `True`
+    (in-memory), a path (write-through JSONL), or a `TraceRecorder`.
+    Every request's span (submit -> admit -> enqueue -> flush ->
+    dispatch -> fulfil/shed/fail) lands in `self.trace`, along with §12
+    fault injections and distribute shard/tile events (the recorder is
+    pushed onto `repro.obs.trace`'s active scope for the server's
+    lifetime). Export with `self.trace.write_jsonl()` /
+    `write_chrome()`, or read back via `python -m repro.obs.snapshot`.
+  * **profiling** (`profile=True`, implied by tracing) -- every dispatch
+    is wall-timed against its roofline price; `stats()["profile"]` is
+    the per-(bucket, plan) drift table.
+
+Tracing never touches payload bytes (served outputs stay bit-identical,
+guarded by `scripts/check.sh --smoke-obs`) and costs <5% throughput when
+on (the `serve_obs_overhead` bench row).
+
 `stats()` reports the per-request counters (now per-priority too), the
 batch occupancy histogram, flush-trigger counts, the warm compile-cache
 ledger, the §13 plan-memo/controller/tenant/pool surfaces, and the §12
 fault counters -- everything the serve benchmarks and the
-`--smoke-serve` / `--smoke-fault` / `--smoke-slo` guards read.
+`--smoke-serve` / `--smoke-fault` / `--smoke-slo` / `--smoke-obs`
+guards read.
 """
 from __future__ import annotations
 
@@ -62,6 +88,10 @@ import time
 from typing import Callable, Sequence
 
 from repro.filters.pipeline import EXEC_MODES
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import DispatchProfiler
+from repro.obs.trace import NOOP, resolve_trace
 from repro.serve.admission import (
     AdmissionGate,
     ServerClosed,
@@ -84,7 +114,7 @@ from repro.serve.workload import Workload, resolve_workloads
 @dataclasses.dataclass(frozen=True)
 class ServerConfig:
     """Serving policy knobs (flush triggers, backpressure, exec routing,
-    §13 service levels)."""
+    §13 service levels, §15 observability)."""
 
     max_batch: int = 8              # size flush trigger / occupancy ceiling
     max_delay_ms: float = 2.0       # deadline flush trigger (oldest wait)
@@ -115,6 +145,10 @@ class ServerConfig:
     # ------------------------------- workload classes (DESIGN.md §14)
     workloads: dict[str, Workload] | None = None  # extra classes beyond
     #                                 the built-in 'filter' (e.g. 'infer')
+    # ------------------------------- observability (DESIGN.md §15)
+    trace: object = None            # None | True | jsonl path | recorder
+    profile: bool = False           # roofline drift profiling (tracing
+    #                                 implies it)
 
 
 class ImageFilterServer:
@@ -128,25 +162,49 @@ class ImageFilterServer:
                              f"{self.config.exec!r}")
         self._clock = clock
         self._workloads = resolve_workloads(self.config.workloads)
+        # ---------------------------------------- §15 observability layer
+        self.metrics = MetricsRegistry()
+        self.trace = resolve_trace(self.config.trace, clock=clock)
+        self._owns_trace = (self.trace is not NOOP
+                            and self.trace is not self.config.trace)
+        self._profiler = (DispatchProfiler(self.metrics)
+                          if self.config.profile or self.trace.enabled
+                          else None)
+        m = self.metrics
+        self._c_submitted = m.counter("serve_submitted_total")
+        self._c_served = m.counter("serve_served_total")
+        self._c_failed = m.counter("serve_failed_total")
+        self._c_shed = m.counter("serve_shed_total")
+        self._c_fast_failed = m.counter("serve_fast_failed_total")
+        self._c_errors = m.counter("serve_worker_errors_total")
+        self._c_batches = m.counter("serve_batches_total")
+        self._c_occupancy = m.counter("serve_batch_occupancy_total")
+        self._h_latency = m.histogram("serve_request_latency_seconds")
+        self._last_error: str | None = None
+        # ------------------------------------------------ serving machinery
         self._gate = AdmissionGate(
             self.config.max_pending, self.config.admission_timeout_s, clock,
             tenant_quota=self.config.tenant_quota,
             tenant_quotas=self.config.tenant_quotas,
-            on_wait=self._on_gate_wait if self.config.overload_shed else None)
+            on_wait=self._on_gate_wait if self.config.overload_shed else None,
+            metrics=self.metrics)
         self._controller = (
             AdaptiveBatchController(self.config.max_batch,
                                     self.config.max_delay_ms / 1e3,
-                                    workloads=self._workloads)
+                                    workloads=self._workloads,
+                                    metrics=self.metrics)
             if self.config.adaptive else None)
         self._batcher = ShapeBucketedBatcher(
             self.config.max_batch, self.config.max_delay_ms / 1e3, clock,
-            policy=self._controller.params if self._controller else None)
+            policy=self._controller.params if self._controller else None,
+            trace=self.trace)
         exec_kw = dict(
             interpret=self.config.interpret, pad_pow2=self.config.pad_pow2,
             tile=self.config.tile, tile_batch=self.config.tile_batch,
             degrade_after=self.config.degrade_after,
             plan_memo_max=self.config.plan_memo_max,
-            workloads=self._workloads)
+            workloads=self._workloads, metrics=self.metrics,
+            trace=self.trace, profiler=self._profiler)
         if self.config.pool is not None:
             self._executor: BatchExecutor | ExecutorPool = ExecutorPool(
                 self.config.pool, drain_after=self.config.drain_after,
@@ -160,11 +218,11 @@ class ImageFilterServer:
         self._drain = True
         self._healthy = True            # False once the worker catch-all fired
         self._shed_need = 0             # weight blocked at the gate (§13)
-        self._stats = {"submitted": 0, "served": 0, "failed": 0, "shed": 0,
-                       "shed_overload": 0, "fast_failed": 0, "errors": 0,
-                       "last_error": None, "batches": 0, "occupancy": {},
-                       "flush_reasons": {},
-                       "served_priority": {p: 0 for p in PRIORITIES}}
+        if self.trace.enabled:
+            # activate for the scope-stack emitters (§15): distribute
+            # shard/tile dispatches and §12 fault injections land in the
+            # same trace without holding a recorder reference
+            obs_trace.push(self.trace)
         self._worker = threading.Thread(target=self._loop,
                                         name="repro-serve-worker", daemon=True)
         self._worker.start()
@@ -201,6 +259,7 @@ class ImageFilterServer:
         server with `fail_fast_degraded`, raises `ServerDegraded` without
         taking an admission slot.
         """
+        t_sub = self._clock() if self.trace.enabled else 0.0
         exec_mode = self.config.exec if exec is None else exec
         if exec_mode not in EXEC_MODES:
             raise ValueError(f"exec must be one of {EXEC_MODES}, got "
@@ -218,14 +277,22 @@ class ImageFilterServer:
         if self._closing:
             raise ServerClosed("server is closed")
         if self.config.fail_fast_degraded and not self._is_healthy():
-            with self._cond:
-                self._stats["fast_failed"] += 1
+            self._c_fast_failed.inc()
             raise ServerDegraded(
                 "server is degraded; refusing admission (fail_fast_degraded)")
         if deadline_ms is None:
             deadline_ms = self.config.default_deadline_ms
         weight = wl.weight(arr)
-        self._gate.acquire(weight, tenant, timeout)
+        try:
+            self._gate.acquire(weight, tenant, timeout)
+        except Exception as err:
+            if self.trace.enabled:
+                # rejected admissions never get a seq: they ride the
+                # stream as aux events, outside the exactly-once invariant
+                self.trace.event("reject", ts=t_sub, tenant=tenant,
+                                 priority=priority, workload=workload,
+                                 target=filt, error=type(err).__name__)
+            raise
         future = FilterFuture()
         with self._cond:
             if self._closing:
@@ -242,8 +309,16 @@ class ImageFilterServer:
                                 deadline=deadline, priority=priority,
                                 tenant=tenant, slo=slo, weight=weight,
                                 workload=workload)
+            if self.trace.enabled:
+                # stamped with the instants buffered before the seq existed
+                key = req.key
+                self.trace.event("submit", ts=t_sub, seq=req.seq, bucket=key,
+                                 priority=priority, tenant=tenant,
+                                 workload=workload, exec=exec_mode,
+                                 weight=weight)
+                self.trace.event("admit", ts=now, seq=req.seq, bucket=key)
             self._batcher.add(req)
-            self._stats["submitted"] += 1
+            self._c_submitted.inc()
             self._cond.notify_all()
         return future
 
@@ -275,15 +350,40 @@ class ImageFilterServer:
 
     def stats(self) -> dict:
         """Counters + occupancy histogram + warm-cache ledger + the §12
-        fault/health surface + the §13 service-level surface (a
-        snapshot)."""
-        with self._cond:
-            snap = {k: (dict(v) if isinstance(v, dict) else v)
-                    for k, v in self._stats.items()}
-        snap["pending"] = self._gate.inflight
-        snap["pressure"] = self._gate.pressure()
-        snap["rejected"] = self._gate.rejected
-        snap["tenants"] = self._gate.tenant_stats()
+        fault/health surface + the §13 service-level surface + the §15
+        profile table.
+
+        The request conservation counters (submitted / served / failed /
+        shed / pending / rejected / tenants) are read under ONE registry
+        lock (`metrics.hold()`, DESIGN.md §15), so the snapshot is
+        consistent: `served + failed + shed + shed_overload <= submitted`
+        holds no matter how the worker races this call. The executor /
+        controller surfaces are monotonic operational detail read after
+        the core snapshot (their own locks must stay outside the registry
+        lock -- the §15 lock-order contract)."""
+        with self.metrics.hold():
+            served_priority = {p: self._c_served.value(priority=p)
+                               for p in PRIORITIES}
+            snap = {
+                "submitted": self._c_submitted.value(),
+                "served": sum(served_priority.values()),
+                "failed": self._c_failed.value(),
+                "shed": self._c_shed.value(cause="deadline"),
+                "shed_overload": self._c_shed.value(cause="overload"),
+                "fast_failed": self._c_fast_failed.value(),
+                "errors": self._c_errors.value(),
+                "last_error": self._last_error,
+                "batches": self._c_batches.total(),
+                "occupancy": {int(k): v for k, v in
+                              self._c_occupancy.group_by("n").items()},
+                "flush_reasons": self._c_batches.group_by("reason"),
+                "served_priority": served_priority,
+            }
+            gate = self._gate.snapshot()     # registry-only reads (§15)
+            snap["pending"] = gate["pending"]
+            snap["pressure"] = gate["pressure"]
+            snap["rejected"] = gate["rejected"]
+            snap["tenants"] = gate["tenants"]
         ex = self._executor.stats()
         snap["compile"] = {"warmed": ex["warmed"], "hits": ex["hits"],
                            "misses": ex["misses"]}
@@ -293,6 +393,8 @@ class ImageFilterServer:
         if self._controller is not None:
             snap["controller"] = self._controller.stats()
         snap.update(self._executor.fault_stats())
+        if self._profiler is not None:
+            snap["profile"] = self._profiler.summary()
         snap["healthy"] = self._is_healthy()
         snap["state"] = "healthy" if snap["healthy"] else "degraded"
         return snap
@@ -309,6 +411,10 @@ class ImageFilterServer:
             self._drain = drain
             self._cond.notify_all()
         self._worker.join(timeout)
+        if self.trace.enabled:
+            obs_trace.pop(self.trace)
+            if self._owns_trace:
+                self.trace.close()       # flush the JSONL write-through
 
     def __enter__(self) -> "ImageFilterServer":
         return self
@@ -361,7 +467,6 @@ class ImageFilterServer:
         (`ServerOverloaded` -- their slots go to higher-priority work)."""
         if not shed:
             return
-        counts = {"deadline": 0, "overload": 0}
         for item in shed:
             req = item.request
             if not req.future.done():
@@ -373,11 +478,13 @@ class ImageFilterServer:
                     req.future.set_exception(DeadlineExceeded(
                         f"request seq={req.seq} shed: deadline expired "
                         f"before dispatch (bucket {req.key})"))
-            counts[item.cause] = counts.get(item.cause, 0) + 1
+                if self.trace.enabled:
+                    self.trace.event("shed", seq=req.seq, bucket=req.key,
+                                     cause=item.cause)
             self._gate.release(req.weight, req.tenant)
-        with self._cond:
-            self._stats["shed"] += counts["deadline"]
-            self._stats["shed_overload"] += counts["overload"]
+        with self.metrics.hold():
+            for item in shed:
+                self._c_shed.inc(cause=item.cause)
 
     def _release_batch(self, batch: MicroBatch) -> None:
         for req in batch.requests:
@@ -387,6 +494,9 @@ class ImageFilterServer:
         for req in batch.requests:
             if not req.future.done():
                 req.future.set_exception(err)
+                if self.trace.enabled:
+                    self.trace.event("fail", seq=req.seq, bucket=batch.key,
+                                     cause="closed", error=repr(err))
         self._release_batch(batch)
 
     def _run(self, batch: MicroBatch) -> None:
@@ -399,29 +509,35 @@ class ImageFilterServer:
             for req in batch.requests:
                 if not req.future.done():
                     req.future.set_exception(err)
+                    if self.trace.enabled:
+                        self.trace.event("fail", seq=req.seq,
+                                         bucket=batch.key, cause="worker",
+                                         error=repr(err))
             with self._cond:
                 self._healthy = False
-                self._stats["errors"] += 1
-                self._stats["last_error"] = repr(err)
+            with self.metrics.hold():
+                self._c_errors.inc()
+                self._last_error = repr(err)
+        now = self._clock()
         if self._controller is not None and batch.requests:
             # feed the §13 observed-service ledger with the traced batch
             # size this dispatch actually compiled for
             n = len(batch.requests)
             traced = next_pow2(n) if self.config.pad_pow2 else n
             self._controller.observe(batch.key, batch.requests[0], traced,
-                                     self._clock() - t0)
+                                     now - t0)
         served = [r for r in batch.requests if not r.future.failed()]
-        with self._cond:
-            self._stats["batches"] += 1
-            occ = self._stats["occupancy"]
-            occ[len(batch.requests)] = occ.get(len(batch.requests), 0) + 1
-            fr = self._stats["flush_reasons"]
-            fr[batch.reason] = fr.get(batch.reason, 0) + 1
-            self._stats["served"] += len(served)
-            self._stats["failed"] += len(batch.requests) - len(served)
-            sp = self._stats["served_priority"]
+        # one lock acquisition for the whole batch outcome (§15): a
+        # concurrent stats() sees all of it or none of it
+        with self.metrics.hold():
+            self._c_batches.inc(reason=batch.reason)
+            self._c_occupancy.inc(n=len(batch.requests))
             for r in served:
-                sp[r.priority] = sp.get(r.priority, 0) + 1
+                self._c_served.inc(priority=r.priority)
+            if len(batch.requests) - len(served):
+                self._c_failed.inc(len(batch.requests) - len(served))
+        for r in served:
+            self._h_latency.observe(now - r.submitted, priority=r.priority)
         self._release_batch(batch)
 
 
